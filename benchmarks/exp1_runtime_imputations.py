@@ -1,0 +1,65 @@
+"""Experiment 1 (paper Figs. 9–10): runtime & #imputations for Offline /
+ImputeDB(eager) / QUIP-lazy / QUIP-adaptive, per imputer, on the WiFi and
+CDC data sets (random workload)."""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import run_workload
+from repro.data.queries import workload
+from repro.data.synthetic import cdc_dataset, wifi_dataset
+
+NAME = "exp1_runtime_imputations"
+
+
+def run(fast: bool = True) -> List[Dict]:
+    rows: List[Dict] = []
+    nq = 6 if fast else 20
+    datasets = {
+        "wifi": wifi_dataset()[0],
+        "cdc": cdc_dataset()[0],
+    }
+    imputers = {"wifi": ["mean", "knn", "locater", "xgboost"],
+                "cdc": ["mean", "knn", "xgboost"]}
+    for ds, tables in datasets.items():
+        queries = workload(ds, tables, kind="random", n_queries=nq, seed=7)
+        for imp in imputers[ds]:
+            res = run_workload(tables, queries, imp,
+                               strategies=("offline", "imputedb", "lazy", "adaptive"))
+            for strat, r in res.items():
+                rows.append({
+                    "dataset": ds, "imputer": imp, "strategy": strat,
+                    "imputations": r.imputations,
+                    "runtime_s": round(r.wall_seconds, 4),
+                    "temp_tuples": r.temp_tuples,
+                })
+    return rows
+
+
+def derived(rows: List[Dict]) -> Dict[str, float]:
+    """Paper claims: QUIP ≤ a few % of ImputeDB's imputations on expensive
+    imputers; 2–10× runtime win; ≫ offline."""
+    out = {}
+    for ds in ("wifi", "cdc"):
+        for imp in ("knn", "locater"):
+            sub = {r["strategy"]: r for r in rows
+                   if r["dataset"] == ds and r["imputer"] == imp}
+            if not sub or "adaptive" not in sub:
+                continue
+            eager = max(sub["imputedb"]["imputations"], 1)
+            off = max(sub["offline"]["imputations"], 1)
+            ad = sub["adaptive"]
+            out[f"{ds}/{imp}/imp_vs_eager"] = round(
+                ad["imputations"] / eager, 4
+            )
+            out[f"{ds}/{imp}/imp_vs_offline"] = round(
+                ad["imputations"] / off, 4
+            )
+            out[f"{ds}/{imp}/speedup_vs_eager"] = round(
+                sub["imputedb"]["runtime_s"] / max(ad["runtime_s"], 1e-9), 2
+            )
+            out[f"{ds}/{imp}/speedup_vs_offline"] = round(
+                sub["offline"]["runtime_s"] / max(ad["runtime_s"], 1e-9), 2
+            )
+    return out

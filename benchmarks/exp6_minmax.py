@@ -1,0 +1,72 @@
+"""Table 7 (paper §9.4.2): MAX/MIN pushdown optimization — #imputations,
+running time, and |RT| (tuples removed by the dynamic predicate) with the
+optimization on (QUIP) vs off (QUIP-)."""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import IMPUTER_FACTORIES, run_workload
+from repro.core.executor import execute_quip
+from repro.core.plan import Aggregate, Query
+from repro.core.predicates import JoinPredicate, SelectionPredicate
+from repro.data.queries import workload
+from repro.data.synthetic import cdc_dataset, wifi_dataset
+from repro.imputers import ImputationEngine
+
+NAME = "exp6_minmax"
+
+
+def _minmax_queries(ds: str, tables) -> List[Query]:
+    qs = []
+    base = workload(ds, tables, kind="random", n_queries=12, seed=29)
+    for q in base:
+        if q.aggregate is None or len(q.tables) < 2:
+            continue
+        qs.append(Query(
+            tables=q.tables, selections=q.selections, joins=q.joins,
+            projection=(),
+            aggregate=Aggregate("max" if len(qs) % 2 == 0 else "min",
+                                q.aggregate.attr, group_by=None),
+        ))
+    return qs[:4]
+
+
+def run(fast: bool = True) -> List[Dict]:
+    rows: List[Dict] = []
+    for ds, tables in (("cdc", cdc_dataset()[0]),
+                       ("wifi", wifi_dataset()[0])):
+        for qi, q in enumerate(_minmax_queries(ds, tables)):
+            rec = {"dataset": ds, "query": f"{ds}-Q{qi}"}
+            for on in (True, False):
+                eng = ImputationEngine(
+                    {t: r.copy() for t, r in tables.items()},
+                    default=IMPUTER_FACTORIES["knn"],
+                )
+                res = execute_quip(q, tables, eng, strategy="adaptive",
+                                   minmax_opt=on, morsel_rows=256)
+                tag = "on" if on else "off"
+                rec[f"imputations_{tag}"] = res.counters.imputations
+                rec[f"runtime_ms_{tag}"] = round(
+                    res.counters.wall_seconds * 1e3, 2
+                )
+                if on:
+                    rec["removed_RT"] = res.counters.minmax_removed
+                    rec["answer"] = str(res.answer_tuples())
+                else:
+                    rec["answer_off"] = str(res.answer_tuples())
+            rec["answers_equal"] = rec["answer"] == rec.pop("answer_off")
+            rows.append(rec)
+    return rows
+
+
+def derived(rows: List[Dict]) -> Dict[str, float]:
+    out = {}
+    tot_on = sum(r["imputations_on"] for r in rows)
+    tot_off = sum(r["imputations_off"] for r in rows)
+    out["imputation_reduction"] = round(1 - tot_on / max(tot_off, 1), 4)
+    out["total_RT_removed"] = sum(r["removed_RT"] for r in rows)
+    out["all_answers_equal"] = float(all(r["answers_equal"] for r in rows))
+    return out

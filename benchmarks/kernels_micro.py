@@ -1,0 +1,85 @@
+"""Kernel microbenchmarks: bloom probe + masked-KNN distance — wall time of
+the jitted ref path on CPU and allclose vs oracle for the Pallas kernels in
+interpret mode (the perf numbers that matter are the dry-run rooflines; this
+is the correctness+overhead record)."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.kernels.hashing import fold64, hash_positions_np
+
+NAME = "kernels_micro"
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)  # warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jnp.asarray(out).block_until_ready() if hasattr(out, "block_until_ready") else None
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(fast: bool = True) -> List[Dict]:
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # bloom probe
+    log2m, k = 20, 4
+    bits = np.zeros((1 << log2m) // 32, dtype=np.uint32)
+    keys = rng.integers(0, 1 << 40, 1 << 14).astype(np.int64)
+    pos = hash_positions_np(keys[: 1 << 13], k, log2m).ravel()
+    np.bitwise_or.at(bits, pos >> 5, np.uint32(1) << (pos & 31))
+    folded = fold64(keys)
+    us_ref = _time(
+        lambda: kops.bloom_probe(jnp.asarray(bits), jnp.asarray(folded),
+                                 num_hashes=k, log2m=log2m, impl="ref")
+    )
+    ref_out = np.asarray(kref.bloom_probe_ref(
+        jnp.asarray(bits), jnp.asarray(folded), k, log2m))
+    pl_out = np.asarray(kops.bloom_probe(
+        jnp.asarray(bits), jnp.asarray(folded), num_hashes=k, log2m=log2m,
+        impl="pallas"))
+    rows.append({
+        "kernel": "bloom_probe", "n": len(keys),
+        "us_per_call_ref": round(us_ref, 1),
+        "pallas_matches_ref": bool((ref_out == pl_out).all()),
+        "hit_rate": float(ref_out.mean()),
+    })
+
+    # masked knn distance
+    nq, nr, d = (128, 512, 64) if fast else (512, 4096, 128)
+    q = rng.normal(size=(nq, d)).astype(np.float32)
+    r = rng.normal(size=(nr, d)).astype(np.float32)
+    qm = (rng.random((nq, d)) > 0.3).astype(np.float32)
+    rm = (rng.random((nr, d)) > 0.3).astype(np.float32)
+    us_ref = _time(
+        lambda: kops.masked_distance(q, qm, r, rm, impl="ref")
+    )
+    ref_d = np.asarray(kops.masked_distance(q, qm, r, rm, impl="ref"))
+    pl_d = np.asarray(kops.masked_distance(q, qm, r, rm, impl="pallas"))
+    finite = np.isfinite(ref_d)
+    err = float(np.max(np.abs(ref_d[finite] - pl_d[finite])))
+    rows.append({
+        "kernel": "masked_knn_distance", "shape": f"{nq}x{nr}x{d}",
+        "us_per_call_ref": round(us_ref, 1),
+        "pallas_max_abs_err": err,
+        "pallas_inf_match": bool(
+            (np.isinf(ref_d) == np.isinf(pl_d)).all()
+        ),
+    })
+    return rows
+
+
+def derived(rows: List[Dict]) -> Dict[str, float]:
+    return {
+        "bloom_pallas_ok": float(rows[0]["pallas_matches_ref"]),
+        "knn_pallas_err": rows[1]["pallas_max_abs_err"],
+    }

@@ -1,0 +1,78 @@
+"""Benchmark orchestrator: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only exp1,...]
+
+Prints a per-experiment summary plus a ``name,value`` derived-metrics CSV,
+and writes benchmarks/results.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from benchmarks import (
+    exp1_runtime_imputations,
+    exp2_quality,
+    exp3_selectivity,
+    exp4_bloom,
+    exp5_plans,
+    exp6_minmax,
+    exp7_query_baseline,
+    kernels_micro,
+)
+
+MODULES = [
+    exp1_runtime_imputations,
+    exp2_quality,
+    exp3_selectivity,
+    exp4_bloom,
+    exp5_plans,
+    exp6_minmax,
+    exp7_query_baseline,
+    kernels_micro,
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale workloads (slower)")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--out", default="benchmarks/results.json")
+    args = ap.parse_args(argv)
+
+    only = set(args.only.split(",")) if args.only else None
+    all_results = {}
+    failures = []
+    for mod in MODULES:
+        if only and mod.NAME not in only:
+            continue
+        t0 = time.time()
+        try:
+            rows = mod.run(fast=not args.full)
+            der = mod.derived(rows)
+            all_results[mod.NAME] = {"rows": rows, "derived": der}
+            print(f"\n=== {mod.NAME} ({time.time()-t0:.1f}s) ===")
+            for k, v in der.items():
+                print(f"{mod.NAME}/{k},{v}")
+        except Exception as e:  # noqa: BLE001
+            failures.append((mod.NAME, repr(e)))
+            print(f"\n=== {mod.NAME} FAILED: {e!r} ===")
+            import traceback
+
+            traceback.print_exc()
+    try:
+        with open(args.out, "w") as f:
+            json.dump(all_results, f, indent=2, default=str)
+        print(f"\nwrote {args.out}")
+    except OSError:
+        pass
+    print(f"{len(all_results)} experiments ok, {len(failures)} failed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

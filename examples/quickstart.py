@@ -1,0 +1,32 @@
+"""Quickstart: the paper's motivating example (Tables 1-3, Figure-1 query)
+through QUIP — lazy vs adaptive vs ImputeDB-style eager vs offline.
+
+    PYTHONPATH=src:tests python examples/quickstart.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tests"))
+
+from paper_example import paper_tables, paper_query, oracle_engine
+from repro.core.executor import execute_quip, execute_offline, make_plan
+from repro.core.plan import plan_string
+
+
+def main():
+    tables = paper_tables()
+    query = paper_query()
+    print("Query plan (ImputeDB-style external optimizer):")
+    print(plan_string(make_plan(query, tables)))
+    for strategy in ("lazy", "adaptive", "imputedb"):
+        eng = oracle_engine({t: tables[t].copy() for t in tables})
+        res = execute_quip(query, tables, eng, strategy=strategy)
+        print(f"{strategy:>9}: answer={res.answer_tuples()} "
+              f"imputations={res.counters.imputations} "
+              f"temp_tuples={res.counters.temp_tuples}")
+    eng = oracle_engine({t: tables[t].copy() for t in tables})
+    res = execute_offline(query, tables, eng)
+    print(f"{'offline':>9}: answer={res.answer_tuples()} "
+          f"imputations={res.counters.imputations}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+from repro.configs.base import (
+    SHAPES,
+    ArchConfig,
+    ShapeConfig,
+    all_archs,
+    get_arch,
+    runnable,
+    runnable_cells,
+)
+
+__all__ = [
+    "SHAPES",
+    "ArchConfig",
+    "ShapeConfig",
+    "all_archs",
+    "get_arch",
+    "runnable",
+    "runnable_cells",
+]

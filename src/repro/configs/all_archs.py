@@ -1,0 +1,12 @@
+"""Import every assigned architecture config (populates the registry)."""
+
+import repro.configs.qwen2_5_3b  # noqa: F401
+import repro.configs.gemma_7b  # noqa: F401
+import repro.configs.qwen3_8b  # noqa: F401
+import repro.configs.gemma2_27b  # noqa: F401
+import repro.configs.pixtral_12b  # noqa: F401
+import repro.configs.hubert_xlarge  # noqa: F401
+import repro.configs.mamba2_370m  # noqa: F401
+import repro.configs.moonshot_v1_16b_a3b  # noqa: F401
+import repro.configs.deepseek_v3_671b  # noqa: F401
+import repro.configs.zamba2_1_2b  # noqa: F401

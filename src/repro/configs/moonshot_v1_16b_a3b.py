@@ -1,0 +1,20 @@
+"""moonshot-v1-16b-a3b [moe] — kimi/moonlight: 64 experts top-6 (+2 shared),
+per-expert FFN 1408, first layer dense [hf:moonshotai/Moonlight-16B-A3B]."""
+
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="moonshot-v1-16b-a3b",
+    family="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1408,
+    vocab=163840,
+    n_experts=64,
+    top_k=6,
+    n_shared_experts=2,
+    first_dense_layers=1,
+    activation="silu",
+))

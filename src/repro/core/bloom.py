@@ -1,0 +1,61 @@
+"""Bloom filters with completeness tracking (paper §4).
+
+One :class:`BloomFilter` per equi-join attribute.  Values are inserted as
+tuples rise to the join operator; imputed values are inserted after passing
+verification.  ``BFC(a)`` (completeness w.r.t. the query) is tracked by the
+executor: the filter is *complete* once (i) the operand side has been fully
+consumed (hash table built / relation scanned) AND (ii) the attribute's
+missing counter is zero (paper §4, last paragraph).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.kernels import ops as kops
+from repro.kernels.hashing import fold64, hash_positions_np
+
+__all__ = ["BloomFilter"]
+
+
+class BloomFilter:
+    def __init__(self, attr: str, log2m: int = 20, num_hashes: int = 4):
+        self.attr = attr
+        self.log2m = int(log2m)
+        self.num_hashes = int(num_hashes)
+        self.bits = np.zeros((1 << self.log2m) // 32, dtype=np.uint32)
+        self.n_inserted = 0
+        self.complete = False  # BFC(attr)
+
+    # ------------------------------------------------------------------ #
+    def insert(self, keys: np.ndarray) -> None:
+        keys = np.asarray(keys)
+        if keys.size == 0:
+            return
+        pos = hash_positions_np(keys, self.num_hashes, self.log2m).ravel()
+        word = (pos >> np.uint32(5)).astype(np.int64)
+        bit = (np.uint32(1) << (pos & np.uint32(31))).astype(np.uint32)
+        np.bitwise_or.at(self.bits, word, bit)
+        self.n_inserted += len(keys)
+
+    def might_contain(self, keys: np.ndarray, impl=None) -> np.ndarray:
+        keys = np.asarray(keys)
+        if keys.size == 0:
+            return np.zeros(0, dtype=bool)
+        out = kops.bloom_probe(
+            self.bits,
+            fold64(keys),
+            num_hashes=self.num_hashes,
+            log2m=self.log2m,
+            impl=impl,
+        )
+        return np.asarray(out)
+
+    def mark_complete(self) -> None:
+        self.complete = True
+
+    def __repr__(self):
+        return (
+            f"BloomFilter({self.attr}, m=2^{self.log2m}, k={self.num_hashes}, "
+            f"n={self.n_inserted}, complete={self.complete})"
+        )

@@ -1,0 +1,89 @@
+"""§9.3 extensions: union, set minus, nested (IN-subquery) queries.
+
+* ``execute_union``  — L ∪ R: each branch runs through QUIP normally
+  (filter → DF → verify per branch); missing values may stay delayed inside
+  the branches (they are resolved by each branch's ρ).
+* ``execute_minus``  — L − R: a *blocking* operator for QUIP (paper §9.3):
+  all missing values in both branches are imputed before evaluation to
+  avoid cascade invalidation; implemented by running both branches and
+  multiset-subtracting the answer tuples.
+* ``execute_nested`` — outer query with ``attr IN (subquery)``: QUIP runs
+  the subquery first (its ρ guarantees no missing values in its output),
+  then the outer query with the result as an ``in``-set predicate.
+"""
+
+from __future__ import annotations
+
+from collections import Counter
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.executor import ExecutionResult, execute_quip
+from repro.core.plan import Query
+from repro.core.predicates import SelectionPredicate
+from repro.core.relation import MaskedRelation
+
+__all__ = ["execute_union", "execute_minus", "execute_nested"]
+
+
+def _run(q: Query, tables, engine, strategy: str) -> ExecutionResult:
+    return execute_quip(q, tables, engine, strategy=strategy)
+
+
+def execute_union(left: Query, right: Query, tables, engine_factory,
+                  strategy: str = "adaptive") -> Tuple[List[tuple], Dict]:
+    el, er = engine_factory(), engine_factory()
+    rl = _run(left, tables, el, strategy)
+    rr = _run(right, tables, er, strategy)
+    answers = rl.answer_tuples() + rr.answer_tuples()
+    stats = {
+        "imputations": rl.counters.imputations + rr.counters.imputations
+    }
+    return answers, stats
+
+
+def execute_minus(left: Query, right: Query, tables, engine_factory,
+                  strategy: str = "adaptive") -> Tuple[List[tuple], Dict]:
+    """L − R (multiset semantics over projected tuples).  Set minus blocks:
+    both branches run with an *eager-at-ρ* guarantee (every branch answer is
+    fully imputed by construction of ρ), so the subtraction is exact."""
+    el, er = engine_factory(), engine_factory()
+    rl = _run(left, tables, el, strategy)
+    rr = _run(right, tables, er, strategy)
+    remaining = Counter(rl.answer_tuples()) - Counter(rr.answer_tuples())
+    answers = sorted(remaining.elements())
+    stats = {
+        "imputations": rl.counters.imputations + rr.counters.imputations
+    }
+    return answers, stats
+
+
+def execute_nested(outer: Query, in_attr: str, sub: Query, tables,
+                   engine_factory, strategy: str = "adaptive"
+                   ) -> Tuple[List[tuple], Dict]:
+    """``outer WHERE in_attr IN (SELECT ... sub)`` — the paper's Fig. 18/19.
+    The subquery subtree is blocking: QUIP executes it first (no missing
+    values survive its ρ), then the outer query runs with the materialized
+    ``in``-set."""
+    es = engine_factory()
+    rs = _run(sub, tables, es, strategy)
+    assert len(rs.relation.column_names()) >= 1, "subquery needs a column"
+    col = rs.relation.column_names()[0]
+    values = frozenset(
+        int(v) for v in rs.relation.values(col)[rs.relation.is_present(col)]
+    )
+    pred = SelectionPredicate(in_attr, "in", values or frozenset({-(2**60)}))
+    outer2 = Query(
+        tables=outer.tables,
+        selections=tuple(outer.selections) + (pred,),
+        joins=outer.joins,
+        projection=outer.projection,
+        aggregate=outer.aggregate,
+    )
+    eo = engine_factory()
+    ro = _run(outer2, tables, eo, strategy)
+    stats = {
+        "imputations": rs.counters.imputations + ro.counters.imputations
+    }
+    return ro.answer_tuples(), stats

@@ -1,0 +1,14 @@
+from repro.imputers.base import ImputationEngine, Imputer
+from repro.imputers.mean import MeanImputer
+from repro.imputers.knn import KnnImputer
+from repro.imputers.gbdt import GbdtImputer
+from repro.imputers.locater import LocaterImputer
+
+__all__ = [
+    "ImputationEngine",
+    "Imputer",
+    "MeanImputer",
+    "KnnImputer",
+    "GbdtImputer",
+    "LocaterImputer",
+]

@@ -1,0 +1,118 @@
+"""Imputer interface + the engine QUIP operators call into.
+
+Imputers follow the paper's blocking / non-blocking taxonomy (§2.1):
+
+* non-blocking — impute per tuple(-batch) from local/streamed state
+  (mean-by-histogram, LOCATER-style time series);
+* blocking — require a training pass over the table first (KNN's reference
+  matrix, GBDT).  Training cost is charged once on first use; inference cost
+  per value afterwards.
+
+The engine deduplicates by (table, attr, tid) — the same missing value
+imputed through two pipeline copies is computed (and counted) once, and all
+copies observe the same value (this is what makes snapshot writeback
+consistent).  ``cost_per_value`` lets benchmarks model expensive imputers
+(KNN inference, LOCATER) without wall-clock sleeps: simulated seconds flow
+into both the decision-function statistics and the reported runtimes.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.relation import MaskedRelation
+from repro.core.stats import ExecutionCounters, RuntimeStats
+
+__all__ = ["Imputer", "ImputationEngine"]
+
+
+class Imputer:
+    """Per-(table) imputation model; ``impute_attr`` fills one attribute."""
+
+    blocking: bool = False
+    cost_per_value: float = 0.0  # simulated seconds per imputed value
+    train_cost: float = 0.0  # simulated seconds, charged once (blocking)
+
+    def fit(self, table: MaskedRelation) -> None:  # pragma: no cover
+        pass
+
+    def impute_attr(
+        self, table: MaskedRelation, attr: str, tids: np.ndarray
+    ) -> np.ndarray:
+        raise NotImplementedError
+
+
+class ImputationEngine:
+    def __init__(
+        self,
+        tables: Dict[str, MaskedRelation],
+        default: Callable[[], Imputer],
+        per_attr: Optional[Dict[str, Imputer]] = None,
+        stats: Optional[RuntimeStats] = None,
+        counters: Optional[ExecutionCounters] = None,
+    ):
+        self.tables = tables
+        self._default = default
+        self._per_attr = dict(per_attr or {})
+        self.stats = stats or RuntimeStats()
+        self.counters = counters or ExecutionCounters()
+        self._models: Dict[Tuple[str, str], Imputer] = {}
+        self._fitted: set = set()
+        self._cache: Dict[Tuple[str, str], Dict[int, float]] = {}
+        self.simulated_seconds: float = 0.0
+
+    # ------------------------------------------------------------------ #
+    def _model_for(self, table: str, attr: str) -> Imputer:
+        key = (table, attr)
+        if key not in self._models:
+            self._models[key] = self._per_attr.get(attr) or self._default()
+        model = self._models[key]
+        fit_key = (table, id(model))
+        if fit_key not in self._fitted:
+            t0 = time.perf_counter()
+            model.fit(self.tables[table])
+            train_wall = time.perf_counter() - t0
+            self._fitted.add(fit_key)
+            if model.blocking:
+                self.simulated_seconds += model.train_cost
+                self.counters.imputation_seconds += train_wall + model.train_cost
+        return model
+
+    # ------------------------------------------------------------------ #
+    def impute(self, table: str, attr: str, tids: np.ndarray) -> np.ndarray:
+        """Values for base-row ids ``tids`` of ``table.attr`` (deduplicated)."""
+        tids = np.asarray(tids, dtype=np.int64)
+        cache = self._cache.setdefault((table, attr), {})
+        todo = np.array(
+            sorted({int(t) for t in tids.tolist() if int(t) not in cache}),
+            dtype=np.int64,
+        )
+        if len(todo):
+            model = self._model_for(table, attr)
+            t0 = time.perf_counter()
+            vals = np.asarray(model.impute_attr(self.tables[table], attr, todo))
+            wall = time.perf_counter() - t0
+            sim = model.cost_per_value * len(todo)
+            self.simulated_seconds += sim
+            self.counters.imputations += len(todo)
+            self.counters.imputation_seconds += wall + sim
+            self.stats.record_imputation(attr, len(todo), wall + sim)
+            for t, v in zip(todo.tolist(), vals.tolist()):
+                cache[t] = v
+        dtype = self.tables[table].cols[attr].dtype
+        return np.asarray([cache[int(t)] for t in tids.tolist()], dtype=dtype)
+
+    # ------------------------------------------------------------------ #
+    def total_missing(self, tables: Optional[Dict[str, MaskedRelation]] = None
+                      ) -> int:
+        tables = tables or self.tables
+        return int(
+            sum(
+                rel.is_missing(a).sum()
+                for rel in tables.values()
+                for a in rel.column_names()
+            )
+        )

@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: bloom-filter probe (QUIP join trigger / semi-join filter).
+
+The bitset (≤ 2^23 bits = 1 MiB) is VMEM-resident for the whole grid; keys are
+streamed in 1024-lane blocks.  Each lane computes ``num_hashes`` multiply-shift
+positions and tests the corresponding bit via a vectorized word gather.  This
+is the probe used by BF_Join (paper Alg. 2) and the VF-list semi-join filter
+(paper §5.3) — memory-bound integer work that would otherwise round-trip HBM
+per hash function.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.hashing import MULTIPLIERS, OFFSETS
+
+__all__ = ["bloom_probe_pallas"]
+
+BLOCK = 1024
+
+
+def _kernel(folded_ref, bits_ref, out_ref, *, num_hashes: int, log2m: int):
+    folded = folded_ref[...].astype(jnp.uint32)
+    bits = bits_ref[...]
+    ok = jnp.ones(folded.shape, dtype=jnp.bool_)
+    for i in range(num_hashes):
+        h = folded * jnp.uint32(int(MULTIPLIERS[i])) + jnp.uint32(int(OFFSETS[i]))
+        pos = h >> jnp.uint32(32 - log2m)
+        word_idx = (pos >> jnp.uint32(5)).astype(jnp.int32)
+        bit = pos & jnp.uint32(31)
+        w = jnp.take(bits, word_idx, axis=0)
+        ok = ok & (((w >> bit) & jnp.uint32(1)) == 1)
+    out_ref[...] = ok
+
+
+@functools.partial(jax.jit, static_argnames=("num_hashes", "log2m", "interpret"))
+def bloom_probe_pallas(
+    bits: jnp.ndarray,
+    folded: jnp.ndarray,
+    *,
+    num_hashes: int,
+    log2m: int,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """bits: (2**log2m // 32,) uint32; folded: (n,) uint32 keys → (n,) bool.
+
+    Keys are pre-folded to uint32 on the host (``hashing.fold64``): x32-mode
+    JAX and the TPU VPU have no 64-bit integer lanes.
+    """
+    n = folded.shape[0]
+    f = folded.astype(jnp.uint32)
+    pad = (-n) % BLOCK
+    if pad:
+        f = jnp.pad(f, (0, pad))
+    npad = f.shape[0]
+    grid = (npad // BLOCK,)
+    out = pl.pallas_call(
+        functools.partial(_kernel, num_hashes=num_hashes, log2m=log2m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec(bits.shape, lambda i: (0,)),  # whole bitset in VMEM
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((npad,), jnp.bool_),
+        interpret=interpret,
+    )(f, bits)
+    return out[:n]

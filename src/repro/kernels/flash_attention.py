@@ -1,0 +1,157 @@
+"""Pallas TPU kernel: fused flash attention (GQA, causal/windowed).
+
+§Perf identified attention score-tensor HBM traffic as the dominant memory
+term on every train/prefill cell (the pure-XLA chunked path still spills the
+(q_block × k_block) probability tiles).  This kernel keeps the running
+max / denominator / accumulator in VMEM across the k-block grid axis, so the
+only HBM traffic is q/k/v reads and one output write — the structural fix
+recorded in EXPERIMENTS.md §Roofline ("what would move the memory term").
+
+Layout: q (B, H, S, D); k/v (B, KV, S, D); grid (B, H, NQ, NK) with the NK
+axis innermost — TPU executes it sequentially per core, so the m/l planes
+(extra outputs revisited at every kj) act as carried state, exactly like the
+accumulator trick in ``knn_distance.py``.  Causal/window block skipping via
+``pl.when``.  Validated in interpret mode against ``ref.attention_ref``
+(CPU); on TPU the same BlockSpecs tile VMEM with MXU-aligned (128, D)
+blocks.  (The m/l planes are (.., BQ) vectors; on real TPU they would be
+padded to (BQ, 128) lanes — interpret mode does not require it.)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["flash_attention_pallas"]
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+            bq: int, bk: int, nk: int, seq_len: int, rep: int,
+            causal: bool, window: Optional[int], scale: float):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_lo = qi * bq
+    k_lo = kj * bk
+    run = True
+    if causal:
+        run = k_lo <= q_lo + bq - 1  # block not strictly above the diagonal
+    if window is not None:
+        run = jnp.logical_and(run, k_lo + bk - 1 > q_lo - window)
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0, 0].astype(jnp.float32)  # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale  # (bq, bk)
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        ok = kpos < seq_len
+        if causal:
+            ok = jnp.logical_and(ok, kpos <= qpos)
+        if window is not None:
+            ok = jnp.logical_and(ok, kpos > qpos - window)
+        s = jnp.where(ok, s, NEG)
+
+        m_prev = m_ref[0, 0]  # (bq,)
+        l_prev = l_ref[0, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + p.sum(axis=1)
+        acc = o_ref[0, 0] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        o_ref[0, 0] = acc
+        m_ref[0, 0] = m_new
+        l_ref[0, 0] = l_new
+
+    @pl.when(kj == nk - 1)
+    def _final():
+        l = l_ref[0, 0]
+        o_ref[0, 0] = o_ref[0, 0] / jnp.maximum(l, 1e-30)[:, None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "bq", "bk", "interpret"),
+)
+def flash_attention_pallas(
+    q: jnp.ndarray,  # (B, S, H, D)
+    k: jnp.ndarray,  # (B, S, KV, D)
+    v: jnp.ndarray,  # (B, S, KV, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    rep = h // max(kv, 1)
+    if scale is None:
+        scale = float(1.0 / (d ** 0.5))
+    bq = min(bq, max(s, 8))
+    bk = min(bk, max(s, 8))
+
+    qt = jnp.moveaxis(q, 2, 1)  # (B, H, S, D)
+    kt = jnp.moveaxis(k, 2, 1)  # (B, KV, S, D)
+    vt = jnp.moveaxis(v, 2, 1)
+
+    pad_q = (-s) % bq
+    pad_k = (-s) % bk
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    sq, sk = qt.shape[2], kt.shape[2]
+    nq, nk = sq // bq, sk // bk
+
+    grid = (b, h, nq, nk)
+    out, _m, _l = pl.pallas_call(
+        functools.partial(
+            _kernel, bq=bq, bk=bk, nk=nk, seq_len=s, rep=rep,
+            causal=causal, window=window, scale=scale,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bi, hi, qi, kj: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bi, hi, qi, kj, rep=rep: (bi, hi // rep, kj, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bi, hi, qi, kj, rep=rep: (bi, hi // rep, kj, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bi, hi, qi, kj: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, bq), lambda bi, hi, qi, kj: (bi, hi, qi)),
+            pl.BlockSpec((1, 1, bq), lambda bi, hi, qi, kj: (bi, hi, qi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, sq, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, sq), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, sq), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out[:, :, :s, :]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)  # (B, S, H, D)

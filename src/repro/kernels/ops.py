@@ -1,0 +1,82 @@
+"""Jit'd public wrappers for the Pallas kernels with implementation dispatch.
+
+``impl``:
+  * ``"ref"``     — pure-jnp oracle (fast XLA path on CPU; default here).
+  * ``"pallas"``  — the Pallas kernel.  On this CPU-only container it runs in
+                    interpret mode; on TPU it compiles to Mosaic.
+
+The default is chosen per-backend: Pallas on TPU, ref on CPU (interpret-mode
+Pallas is a correctness tool, not a performance path).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.bloom_probe import bloom_probe_pallas
+from repro.kernels.knn_distance import masked_distance_pallas
+
+__all__ = ["bloom_probe", "masked_distance", "masked_knn", "default_impl"]
+
+
+def default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def bloom_probe(
+    bits: jnp.ndarray,
+    folded: jnp.ndarray,
+    *,
+    num_hashes: int,
+    log2m: int,
+    impl: Optional[str] = None,
+) -> jnp.ndarray:
+    """``folded``: uint32 host-folded keys (see ``hashing.fold64``)."""
+    impl = impl or default_impl()
+    if impl == "pallas":
+        return bloom_probe_pallas(
+            bits, folded, num_hashes=num_hashes, log2m=log2m, interpret=_interpret()
+        )
+    return _probe_ref_jit(bits, folded, num_hashes, log2m)
+
+
+_probe_ref_jit = jax.jit(_ref.bloom_probe_ref, static_argnums=(2, 3))
+
+
+def masked_distance(
+    q: jnp.ndarray,
+    qm: jnp.ndarray,
+    r: jnp.ndarray,
+    rm: jnp.ndarray,
+    *,
+    impl: Optional[str] = None,
+) -> jnp.ndarray:
+    impl = impl or default_impl()
+    if impl == "pallas":
+        return masked_distance_pallas(q, qm, r, rm, interpret=_interpret())
+    return _dist_ref_jit(q, qm, r, rm)
+
+
+_dist_ref_jit = jax.jit(_ref.masked_distance_ref)
+
+
+def masked_knn(
+    q: jnp.ndarray,
+    qm: jnp.ndarray,
+    r: jnp.ndarray,
+    rm: jnp.ndarray,
+    k: int,
+    *,
+    impl: Optional[str] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    dmat = masked_distance(q, qm, r, rm, impl=impl)
+    neg, idx = jax.lax.top_k(-dmat, k)
+    return -neg, idx

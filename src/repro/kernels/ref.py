@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics of record: kernels are validated against these in
+``tests/test_kernels.py`` over shape/dtype sweeps (interpret=True on CPU).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.hashing import MULTIPLIERS, OFFSETS
+
+__all__ = ["bloom_probe_ref", "masked_distance_ref", "masked_knn_ref"]
+
+def bloom_probe_ref(
+    bits: jnp.ndarray, folded: jnp.ndarray, num_hashes: int, log2m: int
+) -> jnp.ndarray:
+    """bits: (2**log2m // 32,) uint32 bitset.  folded: (n,) uint32 keys
+    (int64 keys are folded on the host — see ``hashing.fold64`` — because
+    x32-mode JAX has no 64-bit lanes).  True iff all ``num_hashes`` bits
+    are set."""
+    folded = folded.astype(jnp.uint32)[:, None]
+    a = jnp.asarray(MULTIPLIERS[:num_hashes])[None, :]
+    b = jnp.asarray(OFFSETS[:num_hashes])[None, :]
+    pos = ((folded * a + b) >> jnp.uint32(32 - log2m)).astype(jnp.uint32)
+    word = (pos >> jnp.uint32(5)).astype(jnp.int32)
+    bit = pos & jnp.uint32(31)
+    w = jnp.take(bits, word, axis=0)
+    hit = (w >> bit) & jnp.uint32(1)
+    return jnp.all(hit == 1, axis=1)
+
+
+def masked_distance_ref(
+    q: jnp.ndarray, qm: jnp.ndarray, r: jnp.ndarray, rm: jnp.ndarray
+) -> jnp.ndarray:
+    """Partial-distance matrix for masked KNN (sklearn KNNImputer semantics).
+
+    q: (nq, d) float32, qm: (nq, d) observed-mask (1.0 observed, 0.0 missing)
+    r: (nr, d), rm: (nr, d).
+    dist[i,j] = (d / n_co) * sum_k qm*rm*(q-r)^2   over co-observed dims;
+    +inf (large) where n_co == 0.
+    """
+    q = q.astype(jnp.float32) * qm
+    r = r.astype(jnp.float32) * rm
+    q2 = (q * q) @ rm.T  # sum_k qm*q^2*rm  (qm baked into q)
+    r2 = qm @ (r * r).T
+    cross = q @ r.T
+    sq = q2 + r2 - 2.0 * cross
+    n_co = qm @ rm.T
+    d = q.shape[1]
+    scaled = jnp.where(n_co > 0, sq * (d / jnp.maximum(n_co, 1.0)), jnp.inf)
+    return jnp.maximum(scaled, 0.0)
+
+
+def masked_knn_ref(
+    q: jnp.ndarray,
+    qm: jnp.ndarray,
+    r: jnp.ndarray,
+    rm: jnp.ndarray,
+    k: int,
+):
+    """Top-k smallest partial distances.  Returns (dists (nq,k), idx (nq,k))."""
+    dmat = masked_distance_ref(q, qm, r, rm)
+    neg, idx = jax.lax.top_k(-dmat, k)
+    return -neg, idx
+
+
+def attention_ref(q, k, v, causal: bool = True, window=None, scale=None):
+    """Oracle for the flash-attention kernel: materialized-softmax GQA.
+
+    q: (B, S, H, D); k/v: (B, S, KV, D) → (B, S, H, D)."""
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    rep = h // max(kv, 1)
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    qg = q.astype(jnp.float32).reshape(b, s, kv, rep, d)
+    logits = jnp.einsum("bskrd,btkd->bkrst", qg,
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    ok = jnp.ones((s, s), dtype=bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    logits = jnp.where(ok[None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkrst,btkd->bskrd", w, v.astype(jnp.float32))
+    return out.reshape(b, s, h, d).astype(q.dtype)

@@ -1,0 +1,254 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: ``.lower().compile()`` every (arch × shape × mesh) cell.
+
+The two lines above run before ANY other import (jax locks the device count
+on first init).  Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out report.json
+
+Each cell gets:
+
+* a **check compile** at full depth (scanned layers — compact HLO) that
+  proves sharding/lowering and yields ``memory_analysis()``;
+* a **roofline estimate** via depth extrapolation: the same step is compiled
+  *unrolled* at 1 and 2 periods of the dominant segment; per-period cost =
+  the difference, total = base + per-period × repeats.  Exact for periodic
+  stacks, and avoids both the scan cost-undercount (a while body is counted
+  once) and minutes-long full-depth unrolled compiles.
+"""
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from typing import Any, Dict, Optional, Tuple  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import SHAPES, get_arch, runnable, all_archs  # noqa: E402
+from repro.configs.base import ArchConfig, ShapeConfig  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch import steps as S  # noqa: E402
+from repro.launch import roofline as R  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro.models.transformer import build_segments  # noqa: E402
+from repro.sharding.act import activation_sharding  # noqa: E402
+from repro.sharding.axes import batch_specs, cache_specs, param_specs  # noqa: E402
+
+__all__ = ["dryrun_cell", "compile_cell"]
+
+
+def compile_cell(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                 remat: str = "full", scan_unroll: bool = False):
+    """AOT lower+compile one (cfg, shape) on ``mesh``; returns compiled."""
+    batch = M.batch_spec(cfg, shape)
+    b_specs = batch_specs(cfg, shape, batch, mesh)
+    dp = [a for a in mesh.axis_names if a in ("pod", "data")]
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    seq_parallel = shape.global_batch < dp_size
+    if shape.kind == "train":
+        state = S.abstract_train_state(cfg)
+        s_specs = param_specs(state, mesh)
+        fn = S.build_train_step(cfg, remat=remat, scan_unroll=scan_unroll)
+        with mesh, activation_sharding(mesh, seq_parallel):
+            lowered = jax.jit(
+                fn, in_shardings=(s_specs, b_specs),
+                out_shardings=(s_specs, None),
+            ).lower(state, batch)
+            return lowered.compile()
+    if shape.kind == "prefill":
+        params = M.abstract_params(cfg)
+        p_specs = param_specs(params, mesh)
+        fn = S.build_serve_step(cfg, "prefill", scan_unroll=scan_unroll)
+        with mesh, activation_sharding(mesh, seq_parallel):
+            lowered = jax.jit(
+                fn, in_shardings=(p_specs, b_specs)
+            ).lower(params, batch)
+            return lowered.compile()
+    params = M.abstract_params(cfg)
+    p_specs = param_specs(params, mesh)
+    caches = jax.eval_shape(
+        lambda: M.init_caches(cfg, shape.global_batch, shape.seq_len)
+    )
+    c_specs = cache_specs(cfg, shape, caches, mesh)
+    fn = S.build_serve_step(cfg, "decode", scan_unroll=scan_unroll)
+    with mesh, activation_sharding(mesh, seq_parallel):
+        lowered = jax.jit(
+            fn,
+            in_shardings=(p_specs, c_specs, b_specs),
+            out_shardings=(None, c_specs),
+        ).lower(params, caches, batch)
+        return lowered.compile()
+
+
+def _costs(compiled) -> Tuple[float, float, float, Dict[str, int]]:
+    cost = compiled.cost_analysis()
+    coll = R.collective_bytes_from_hlo(compiled.as_text())
+    return (
+        float(cost.get("flops", 0.0)),
+        float(cost.get("bytes accessed", 0.0)),
+        float(sum(coll.values())),
+        coll,
+    )
+
+
+def _depth_variants(cfg: ArchConfig) -> Tuple[ArchConfig, ArchConfig, int]:
+    segs = build_segments(cfg)
+    main = max(segs, key=lambda s: s.n_layers)
+    period = len(main.pattern)
+    other = cfg.n_layers - main.n_layers
+    c1 = dataclasses.replace(cfg, n_layers=other + period)
+    c2 = dataclasses.replace(cfg, n_layers=other + 2 * period)
+    return c1, c2, main.repeats
+
+
+def roofline_estimate(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                      remat: str = "full") -> Tuple[float, float, float, Dict]:
+    c1, c2, repeats = _depth_variants(cfg)
+    k1 = compile_cell(c1, shape, mesh, remat=remat, scan_unroll=True)
+    f1, b1, cb1, pk1 = _costs(k1)
+    k2 = compile_cell(c2, shape, mesh, remat=remat, scan_unroll=True)
+    f2, b2, cb2, pk2 = _costs(k2)
+    n = repeats - 1
+    flops = f1 + (f2 - f1) * n
+    bts = b1 + (b2 - b1) * n
+    coll = cb1 + (cb2 - cb1) * n
+    per_kind = {
+        k: int(pk1.get(k, 0) + (pk2.get(k, 0) - pk1.get(k, 0)) * n)
+        for k in set(pk1) | set(pk2)
+    }
+    return flops, bts, coll, per_kind
+
+
+def dryrun_cell(arch: str, shape_name: str, multi_pod: bool,
+                remat: str = "full", verbose: bool = True,
+                with_roofline: bool = True,
+                cfg_override: Optional[ArchConfig] = None) -> Dict[str, Any]:
+    cfg = cfg_override or get_arch(arch)
+    shape = SHAPES[shape_name]
+    ok, why = runnable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    t0 = time.time()
+
+    compiled = compile_cell(cfg, shape, mesh, remat=remat)
+    mem = compiled.memory_analysis()
+    out: Dict[str, Any] = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "chips": mesh.devices.size,
+        "compile_seconds": round(time.time() - t0, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+    }
+
+    if with_roofline:
+        flops, bts, coll, per_kind = roofline_estimate(
+            cfg, shape, mesh, remat=remat
+        )
+        report = R.RooflineReport(
+            arch=arch, shape=shape_name, mesh=mesh_name,
+            chips=mesh.devices.size,
+            hlo_flops=flops, hlo_bytes=bts, collective_bytes=coll,
+            per_kind=per_kind, model_flops=R.model_flops(cfg, shape),
+        )
+        out["cost"] = {
+            "flops_per_device": flops,
+            "bytes_per_device": bts,
+            "collective_bytes_per_device": coll,
+            "collectives": per_kind,
+        }
+        out["roofline"] = {
+            "t_compute_ms": report.t_compute * 1e3,
+            "t_memory_ms": report.t_memory * 1e3,
+            "t_collective_ms": report.t_collective * 1e3,
+            "bottleneck": report.bottleneck,
+            "model_flops": report.model_flops,
+            "useful_ratio": report.useful_ratio,
+            "roofline_fraction": report.roofline_fraction,
+        }
+        if verbose:
+            print(
+                f"[OK] {arch} × {shape_name} × {mesh_name}: "
+                f"compile {out['compile_seconds']}s | "
+                f"comp {report.t_compute*1e3:.1f} "
+                f"mem {report.t_memory*1e3:.1f} "
+                f"coll {report.t_collective*1e3:.1f} ms → "
+                f"{report.bottleneck}; useful {report.useful_ratio:.2f}; "
+                f"roofline {report.roofline_fraction:.1%}; "
+                f"peak_mem {out['memory']['peak_bytes'] and out['memory']['peak_bytes']/1e9:.2f}GB",
+                flush=True,
+            )
+    elif verbose:
+        print(f"[OK] {arch} × {shape_name} × {mesh_name}: "
+              f"compile {out['compile_seconds']}s, "
+              f"peak_mem {out['memory']['peak_bytes'] and out['memory']['peak_bytes']/1e9:.2f}GB",
+              flush=True)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--no-roofline", action="store_true",
+                    help="pass/fail + memory only (faster)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    archs = all_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[
+        args.mesh
+    ]
+    results, failures = [], []
+    for arch in archs:
+        for shape in shapes:
+            cfg = get_arch(arch)
+            ok, why = runnable(cfg, SHAPES[shape])
+            if not ok:
+                print(f"[SKIP] {arch} × {shape}: {why}", flush=True)
+                results.append({"arch": arch, "shape": shape, "skipped": why})
+                continue
+            for mp in meshes:
+                try:
+                    results.append(
+                        dryrun_cell(arch, shape, mp, remat=args.remat,
+                                    with_roofline=not args.no_roofline)
+                    )
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape, mp, repr(e)))
+                    print(f"[FAIL] {arch} × {shape} × "
+                          f"{'multi' if mp else 'single'}: {e}", flush=True)
+                    traceback.print_exc()
+                if args.out:
+                    with open(args.out, "w") as f:
+                        json.dump(results, f, indent=2)
+    print(f"\n{len(results)} results, {len(failures)} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,19 @@
+"""Production mesh construction (function, not module-level constant — the
+import must never touch jax device state)."""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh for CPU smoke paths (same axis names as single-pod)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,204 @@
+"""Roofline analysis from compiled dry-run artifacts (TPU v5e targets).
+
+    compute term    = HLO_FLOPs / (chips × 197e12 bf16 FLOP/s)
+    memory term     = HLO_bytes / (chips × 819e9 B/s HBM)
+    collective term = collective_bytes / (chips × 50e9 B/s per ICI link)
+
+``cost_analysis()`` supplies per-device FLOPs/bytes; collective bytes are
+parsed from the compiled HLO text (operand sizes of all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute ops).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+__all__ = ["HW", "RooflineReport", "analyze", "collective_bytes_from_hlo",
+           "model_flops"]
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+
+HW = {"peak_flops": PEAK_FLOPS, "hbm_bw": HBM_BW, "ici_bw": ICI_BW}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.IGNORECASE,
+)
+_SHAPE_RE = re.compile(r"(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64)"
+                       r"\[([0-9,]*)\]")
+
+
+def _line_output_bytes(line: str) -> int:
+    """Bytes of the op's output tuple (per-device, SPMD-partitioned HLO)."""
+    head = line.split("=", 1)[0] + "=" + line.split("=", 1)[1].split("(", 1)[0]
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(head):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind output bytes summed over ops (per device)."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1).lower()
+        b = _line_output_bytes(line)
+        out[kind] = out.get(kind, 0) + b
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float  # per device
+    hlo_bytes: float  # per device
+    collective_bytes: float  # per device
+    per_kind: Dict[str, int]
+    model_flops: float  # analytic 6·N·D (whole step, global)
+    bytes_per_device: Optional[float] = None  # memory_analysis
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / (global HLO FLOPs)."""
+        total = self.hlo_flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the roofline bound the *useful* math achieves:
+        (model_flops / chips / peak) / max(term)."""
+        ideal = self.model_flops / self.chips / PEAK_FLOPS
+        bound = max(self.t_compute, self.t_memory, self.t_collective)
+        return ideal / bound if bound else 0.0
+
+    def row(self) -> str:
+        return (
+            f"| {self.arch} | {self.shape} | {self.mesh} | "
+            f"{self.t_compute*1e3:.2f} | {self.t_memory*1e3:.2f} | "
+            f"{self.t_collective*1e3:.2f} | {self.bottleneck} | "
+            f"{self.useful_ratio:.2f} | {self.roofline_fraction:.2%} |"
+        )
+
+
+def render_report(path: str, mesh_filter: Optional[str] = None) -> str:
+    """Markdown §Roofline table from a dryrun --out JSON."""
+    import json
+
+    with open(path) as f:
+        rows = json.load(f)
+    out = [
+        "| arch | shape | mesh | t_comp (ms) | t_mem (ms) | t_coll (ms) | "
+        "bottleneck | useful | roofline | peak mem (GB) |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    skips = []
+    for r in rows:
+        if "skipped" in r:
+            skips.append(f"| {r['arch']} | {r['shape']} | — skipped: "
+                         f"{r['skipped']} |")
+            continue
+        if mesh_filter and r["mesh"] != mesh_filter:
+            continue
+        rf = r.get("roofline", {})
+        peak = r.get("memory", {}).get("peak_bytes")
+        # sub-ms decode cells: depth-extrapolation noise can go negative
+        clamp = lambda v: max(0.0, v)
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{clamp(rf.get('t_compute_ms', 0)):.1f} | "
+            f"{clamp(rf.get('t_memory_ms', 0)):.1f} | "
+            f"{clamp(rf.get('t_collective_ms', 0)):.1f} | "
+            f"{rf.get('bottleneck','-')} | "
+            f"{clamp(rf.get('useful_ratio', 0)):.2f} | "
+            f"{clamp(rf.get('roofline_fraction', 0))*100:.1f}% | "
+            f"{(peak or 0)/1e9:.2f} |"
+        )
+    return "\n".join(out + [""] + sorted(set(skips)))
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic useful FLOPs per step: 6·N_active·D for training, 2·N_active·D
+    for inference (D = tokens processed), plus attention O(S²) term."""
+    n_active = cfg.active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        base = 6.0 * n_active * tokens
+        attn_mult = 3.0  # fwd + bwd(2x)
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        base = 2.0 * n_active * tokens
+        attn_mult = 1.0
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch * 1
+        base = 2.0 * n_active * tokens
+        attn_mult = 1.0
+
+    # attention score/context FLOPs
+    attn_flops = 0.0
+    hd = cfg.resolved_head_dim if cfg.n_heads else 0
+    for i in range(cfg.n_layers):
+        kind = cfg.layer_kind(i)
+        if kind == "ssm":
+            continue
+        s = shape.seq_len
+        if shape.kind == "decode":
+            q_len, k_len = 1, s
+        else:
+            q_len, k_len = s, s
+        if kind == "local" and cfg.local_window:
+            k_len = min(k_len, cfg.local_window)
+        per_seq = 2.0 * 2.0 * cfg.n_heads * hd * q_len * k_len * 0.5
+        attn_flops += per_seq * shape.global_batch * attn_mult
+    return base + attn_flops
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--report", default="dryrun_report.json")
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    print(render_report(args.report, args.mesh))

@@ -1,0 +1,98 @@
+"""Jittable train / serve steps with sharding annotations.
+
+``build_train_step`` returns (fn, state_spec, batch_spec_tree) ready for
+``jax.jit(fn, in_shardings=..., out_shardings=...)`` — used by the real
+trainer (examples/train_lm.py) and by the multi-pod dry-run (AOT
+lower+compile against ShapeDtypeStructs).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import model as M
+from repro.optim import (
+    adafactor_init,
+    adafactor_update,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    warmup_cosine,
+)
+
+__all__ = ["optimizer_for", "init_train_state", "build_train_step",
+           "build_serve_step", "abstract_train_state"]
+
+
+def optimizer_for(cfg: ArchConfig) -> str:
+    # Adam moments for a 671B model exceed v5e HBM; use factored stats there.
+    return "adafactor" if cfg.num_params() > 100e9 else "adamw"
+
+
+def init_train_state(cfg: ArchConfig, params: Any) -> Dict[str, Any]:
+    opt = optimizer_for(cfg)
+    if opt == "adafactor":
+        return {"params": params, "opt": adafactor_init(params),
+                "step": jnp.zeros((), jnp.int32)}
+    return {"params": params, "opt": adamw_init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_train_state(cfg: ArchConfig) -> Dict[str, Any]:
+    return jax.eval_shape(
+        lambda: init_train_state(cfg, M.init_params(cfg, jax.random.PRNGKey(0)))
+    )
+
+
+def build_train_step(cfg: ArchConfig, *, remat: str = "full",
+                     peak_lr: float = 3e-4, warmup: int = 200,
+                     total_steps: int = 10_000, clip_norm: float = 1.0,
+                     scan_unroll: bool = False):
+    opt = optimizer_for(cfg)
+
+    def train_step(state: Dict[str, Any], batch: Dict[str, Any]):
+        def loss(p):
+            return M.loss_fn(p, cfg, batch, remat=remat,
+                             scan_unroll=scan_unroll)
+
+        loss_val, grads = jax.value_and_grad(loss)(state["params"])
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        lr = warmup_cosine(state["step"], peak_lr, warmup, total_steps)
+        if opt == "adafactor":
+            new_p, new_opt = adafactor_update(
+                state["params"], grads, state["opt"], lr
+            )
+        else:
+            new_p, new_opt = adamw_update(
+                state["params"], grads, state["opt"], lr
+            )
+        new_state = {
+            "params": new_p, "opt": new_opt, "step": state["step"] + 1
+        }
+        metrics = {"loss": loss_val, "gnorm": gnorm, "lr": lr}
+        return new_state, metrics
+
+    return train_step
+
+
+def build_serve_step(cfg: ArchConfig, kind: str, scan_unroll: bool = False):
+    """kind: 'prefill' (full-sequence logits) or 'decode' (one token)."""
+    if kind == "prefill":
+        def serve_step(params, batch):
+            return M.prefill(params, cfg, batch, remat="none",
+                             scan_unroll=scan_unroll)
+        return serve_step
+
+    def serve_step(params, caches, batch):
+        logits, new_caches = M.decode_step(
+            params, caches, cfg, batch["tokens"], batch["pos"],
+            scan_unroll=scan_unroll,
+        )
+        return logits, new_caches
+
+    return serve_step

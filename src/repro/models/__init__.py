@@ -1,0 +1,21 @@
+from repro.models.model import (
+    abstract_params,
+    batch_spec,
+    decode_step,
+    init_caches,
+    init_params,
+    loss_fn,
+    prefill,
+    uses_embeds,
+)
+
+__all__ = [
+    "abstract_params",
+    "batch_spec",
+    "decode_step",
+    "init_caches",
+    "init_params",
+    "loss_fn",
+    "prefill",
+    "uses_embeds",
+]

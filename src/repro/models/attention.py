@@ -1,0 +1,297 @@
+"""Attention blocks: GQA/MQA (qk-norm, qkv-bias, sliding window, softcap) and
+MLA (DeepSeek latent compression), with prefill and single-token decode paths.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import (
+    Params,
+    apply_rope,
+    dense_init,
+    rms_norm,
+    rope,
+    softcap,
+)
+
+__all__ = [
+    "gqa_params", "gqa_apply", "gqa_decode",
+    "mla_params", "mla_apply", "mla_decode",
+    "init_kv_cache",
+]
+
+
+# --------------------------------------------------------------------------- #
+# grouped-query attention
+# --------------------------------------------------------------------------- #
+def gqa_params(key, cfg: ArchConfig, dtype) -> Params:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], (d, h * hd), dtype=dtype),
+        "wk": dense_init(ks[1], (d, kv * hd), dtype=dtype),
+        "wv": dense_init(ks[2], (d, kv * hd), dtype=dtype),
+        "wo": dense_init(ks[3], (h * hd, d), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype=dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype=dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype=dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype=dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype=dtype)
+    return p
+
+
+def _project_qkv(p: Params, cfg: ArchConfig, x: jnp.ndarray
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    from repro.sharding.act import constrain
+
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = constrain(x @ p["wq"], "btf")
+    k = constrain(x @ p["wk"], "btf")
+    v = constrain(x @ p["wv"], "btf")
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = constrain(q.reshape(b, s, h, hd), "bshd")
+    k = constrain(k.reshape(b, s, kv, hd), "bshd")
+    v = constrain(v.reshape(b, s, kv, hd), "bshd")
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _sdpa(cfg: ArchConfig, q, k, v, mask) -> jnp.ndarray:
+    """q: (B,S,H,D); k/v: (B,T,KV,D); mask: (B,1,S,T) or (S,T) additive."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    rep = h // max(kv, 1)
+    qg = q.reshape(b, s, kv, rep, hd)
+    logits = jnp.einsum("bskrd,btkd->bkrst", qg, k).astype(jnp.float32)
+    logits = logits / jnp.sqrt(jnp.float32(hd))
+    logits = softcap(logits, cfg.attn_softcap)
+    logits = logits + mask
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkrst,btkd->bskrd", w, v)
+    return out.reshape(b, s, h * hd)
+
+
+def _causal_mask(s: int, t: int, window: Optional[int]) -> jnp.ndarray:
+    """(1, 1, s, t) additive mask; t >= s, queries at positions t-s..t-1."""
+    qpos = jnp.arange(s)[:, None] + (t - s)
+    kpos = jnp.arange(t)[None, :]
+    ok = kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    return jnp.where(ok, 0.0, -1e30)[None, None].astype(jnp.float32)
+
+
+def gqa_apply(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+              positions: jnp.ndarray, local: bool,
+              causal: bool = True) -> jnp.ndarray:
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x)
+    cos, sin = rope(positions, cfg.resolved_head_dim, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    window = cfg.local_window if local else None
+    if cfg.attn_impl == "pallas" and cfg.attn_softcap is None:
+        # fused VMEM-resident kernel (TPU target; interpret-mode on CPU)
+        from repro.kernels.flash_attention import flash_attention_pallas
+
+        out = flash_attention_pallas(
+            q, k, v, causal=causal, window=window,
+            interpret=jax.default_backend() != "tpu",
+        ).reshape(b, s, -1)
+    elif cfg.attn_impl in ("chunked", "pallas"):
+        from repro.models.flash import flash_attention
+
+        out = flash_attention(
+            q, k, v, causal=causal, window=window,
+            softcap=cfg.attn_softcap,
+            q_chunk=cfg.attn_q_chunk, k_chunk=cfg.attn_k_chunk,
+            pv_bf16=cfg.attn_pv_bf16,
+        ).reshape(b, s, -1)
+    else:
+        if causal:
+            mask = _causal_mask(s, s, window)
+        else:
+            mask = jnp.zeros((1, 1, s, s), dtype=jnp.float32)
+        out = _sdpa(cfg, q, k, v, mask)
+    return out @ p["wo"]
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int, dtype,
+                  n_attn_layers: int):
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    if cfg.mla:
+        # MLA caches the compressed latent + decoupled rope key
+        width = cfg.kv_lora_rank + cfg.rope_head_dim
+        return jnp.zeros((n_attn_layers, batch, max_len, width), dtype=dtype)
+    return jnp.zeros((n_attn_layers, 2, batch, max_len, kv, hd), dtype=dtype)
+
+
+def gqa_decode(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+               cache: jnp.ndarray, pos: jnp.ndarray, local: bool
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B,1,d); cache: (2,B,T,KV,D) with valid prefix [0,pos)."""
+    b = x.shape[0]
+    t = cache.shape[2]
+    q, k, v = _project_qkv(p, cfg, x)
+    cos, sin = rope(pos[:, None], cfg.resolved_head_dim, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    # append at position pos (static cache length; dry-run uses full window)
+    cache_k = jax.vmap(
+        lambda c, kk, pp: jax.lax.dynamic_update_slice(c, kk, (pp, 0, 0))
+    )(cache[0], k, jnp.minimum(pos, t - 1))
+    cache_v = jax.vmap(
+        lambda c, vv, pp: jax.lax.dynamic_update_slice(c, vv, (pp, 0, 0))
+    )(cache[1], v, jnp.minimum(pos, t - 1))
+    kpos = jnp.arange(t)[None, :]
+    ok = kpos <= pos[:, None]
+    if local and cfg.local_window is not None:
+        ok &= kpos > (pos[:, None] - cfg.local_window)
+    # (B, kv, rep, s=1, T) broadcast layout
+    mask = jnp.where(ok, 0.0, -1e30)[:, None, None, None, :].astype(jnp.float32)
+    out = _sdpa(cfg, q, cache_k, cache_v, mask)
+    out = out @ p["wo"]
+    return out, jnp.stack([cache_k, cache_v])
+
+
+# --------------------------------------------------------------------------- #
+# MLA (DeepSeek-V3 multi-head latent attention)
+# --------------------------------------------------------------------------- #
+def mla_params(key, cfg: ArchConfig, dtype) -> Params:
+    d, h = cfg.d_model, cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "wq_a": dense_init(ks[0], (d, qr), dtype=dtype),
+        "q_a_norm": jnp.zeros((qr,), dtype=dtype),
+        "wq_b": dense_init(ks[1], (qr, h * (dn + dr)), dtype=dtype),
+        "wkv_a": dense_init(ks[2], (d, kvr + dr), dtype=dtype),
+        "kv_a_norm": jnp.zeros((kvr,), dtype=dtype),
+        "wkv_b": dense_init(ks[3], (kvr, h * (dn + dv)), dtype=dtype),
+        "wo": dense_init(ks[4], (h * dv, d), dtype=dtype),
+    }
+
+
+def _mla_qkv(p: Params, cfg: ArchConfig, x, positions):
+    from repro.sharding.act import constrain
+
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    q = rms_norm(x @ p["wq_a"], p["q_a_norm"], cfg.norm_eps) @ p["wq_b"]
+    q = constrain(q.reshape(b, s, h, dn + dr), "bshd")
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    kv = constrain(x @ p["wkv_a"], "btd")
+    latent, k_rope = kv[..., : cfg.kv_lora_rank], kv[..., cfg.kv_lora_rank:]
+    latent = rms_norm(latent, p["kv_a_norm"], cfg.norm_eps)
+    cos, sin = rope(positions, dr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)  # single shared head
+    return q_nope, q_rope, latent, k_rope
+
+
+def _mla_attend(p, cfg, q_nope, q_rope, latent, k_rope, mask):
+    from repro.sharding.act import constrain
+
+    b, s, h, dn = q_nope.shape
+    t = latent.shape[1]
+    dv = cfg.v_head_dim
+    wkv = p["wkv_b"].reshape(cfg.kv_lora_rank, h, dn + dv)
+    k_nope_w, v_w = wkv[..., :dn], wkv[..., dn:]
+    # absorb k projection into the query (latent stays compressed — the MLA
+    # trick): q_eff (b,s,h,kvr) = q_nope · k_nope_wᵀ
+    q_eff = constrain(
+        jnp.einsum("bshd,rhd->bshr", q_nope, k_nope_w), "bshr"
+    )
+    logits = constrain(
+        jnp.einsum("bshr,btr->bhst", q_eff, latent), "bhst"
+    ).astype(jnp.float32)
+    logits += constrain(
+        jnp.einsum("bshd,btd->bhst", q_rope, k_rope[:, :, 0, :]), "bhst"
+    ).astype(jnp.float32)
+    logits = logits / jnp.sqrt(jnp.float32(dn + cfg.rope_head_dim))
+    logits = logits + mask
+    w = constrain(
+        jax.nn.softmax(logits, axis=-1), "bhst"
+    ).astype(latent.dtype)
+    ctx = constrain(jnp.einsum("bhst,btr->bshr", w, latent), "bshr")
+    out = jnp.einsum("bshr,rhd->bshd", ctx, v_w)
+    return constrain(out.reshape(b, s, h * dv), "btf") @ p["wo"]
+
+
+def mla_apply(p: Params, cfg: ArchConfig, x, positions, local: bool,
+              causal: bool = True) -> jnp.ndarray:
+    del local
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope, latent, k_rope = _mla_qkv(p, cfg, x, positions)
+    if cfg.attn_impl == "chunked":
+        # Absorbed MLA *is* MQA: one shared (kv_lora+rope_dim)-wide key
+        # (latent ⊕ rope-key) and values = latent — reuse flash attention
+        # with the MLA scale, then project ctx through W_kv_b's value half.
+        from repro.models.flash import flash_attention
+        from repro.sharding.act import constrain
+
+        wkv = p["wkv_b"].reshape(
+            cfg.kv_lora_rank, h, cfg.nope_head_dim + cfg.v_head_dim
+        )
+        k_nope_w = wkv[..., : cfg.nope_head_dim]
+        v_w = wkv[..., cfg.nope_head_dim:]
+        q_eff = constrain(
+            jnp.einsum("bshd,rhd->bshr", q_nope, k_nope_w), "bshr"
+        )
+        q_cat = jnp.concatenate([q_eff, q_rope], axis=-1)
+        k_cat = jnp.concatenate(
+            [latent, k_rope[:, :, 0, :]], axis=-1
+        )[:, :, None, :]
+        ctx = flash_attention(
+            q_cat, k_cat, latent[:, :, None, :], causal=causal,
+            scale=1.0 / float(
+                (cfg.nope_head_dim + cfg.rope_head_dim) ** 0.5
+            ),
+            q_chunk=cfg.attn_q_chunk, k_chunk=cfg.attn_k_chunk,
+            pv_bf16=cfg.attn_pv_bf16,
+        )  # (b, s, h, kv_lora)
+        ctx = constrain(ctx, "bshr")
+        out = jnp.einsum("bshr,rhd->bshd", ctx, v_w)
+        return constrain(
+            out.reshape(b, s, h * cfg.v_head_dim), "btf"
+        ) @ p["wo"]
+    mask = _causal_mask(s, s, None) if causal else 0.0
+    return _mla_attend(p, cfg, q_nope, q_rope, latent, k_rope, mask)
+
+
+def mla_decode(p: Params, cfg: ArchConfig, x, cache, pos, local: bool
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """cache: (B, T, kv_lora + rope_hd) compressed latent+rope-key cache."""
+    del local
+    b = x.shape[0]
+    t = cache.shape[1]
+    q_nope, q_rope, latent, k_rope = _mla_qkv(
+        p, cfg, x, pos[:, None]
+    )
+    new_entry = jnp.concatenate([latent, k_rope[:, :, 0, :]], axis=-1)
+    cache = jax.vmap(
+        lambda c, e, pp: jax.lax.dynamic_update_slice(c, e, (pp, 0))
+    )(cache, new_entry, jnp.minimum(pos, t - 1))
+    lat_t = cache[..., : cfg.kv_lora_rank]
+    kr_t = cache[..., cfg.kv_lora_rank:][:, :, None, :]
+    kpos = jnp.arange(t)[None, :]
+    mask = jnp.where(kpos <= pos[:, None], 0.0, -1e30)[
+        :, None, None, :
+    ].astype(jnp.float32)
+    out = _mla_attend(p, cfg, q_nope, q_rope, lat_t, kr_t, mask)
+    return out, cache

@@ -1,0 +1,140 @@
+"""Flash-style attention in pure JAX: online-softmax over key blocks with a
+query-block scan and causal block skipping.
+
+Memory: O(S·block) instead of O(S²) — this is what makes the 32k prefill
+cells fit HBM and is the first §Perf hillclimb change (the naive path stays
+available as the measured baseline, cfg.attn_impl="naive").
+
+Block skipping: for causal masks, key blocks strictly above the query
+block's diagonal are skipped with ``lax.cond`` (halves attention FLOPs); for
+sliding windows, blocks left of the window are skipped the same way.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention"]
+
+NEG = -1e30
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def flash_attention(
+    q: jnp.ndarray,  # (B, Sq, H, D)
+    k: jnp.ndarray,  # (B, Sk, KV, D)
+    v: jnp.ndarray,  # (B, Sk, KV, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,  # absolute position of q[0] (= Sk - Sq when cached)
+    softcap: Optional[float] = None,
+    q_chunk: int = 512,
+    k_chunk: int = 1024,
+    pv_bf16: bool = False,  # §Perf: bf16 P·V matmul (f32 accumulator)
+    scale: Optional[float] = None,  # default 1/sqrt(head_dim)
+) -> jnp.ndarray:
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    dv = v.shape[3]  # may differ from d (MLA: values are the latent)
+    rep = h // max(kv, 1)
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.float32(d))
+
+    qc = min(q_chunk, sq)
+    kc = min(k_chunk, sk)
+    qp = _pad_to(q, qc, 1)
+    kp = _pad_to(k, kc, 1)
+    vp = _pad_to(v, kc, 1)
+    nq, nk = qp.shape[1] // qc, kp.shape[1] // kc
+
+    qg = qp.reshape(b, nq, qc, kv, rep, d)
+    kg = kp.reshape(b, nk, kc, kv, d)
+    vg = vp.reshape(b, nk, kc, kv, dv)
+
+    kpos_base = jnp.arange(kc)
+    qpos_base = jnp.arange(qc)
+
+    def q_block(_, qi):
+        qb = qg[:, qi]  # (b, qc, kv, rep, d)
+        qpos = q_offset + qi * qc + qpos_base  # absolute
+
+        def k_block(carry, kj):
+            m, l, acc = carry
+
+            def compute(args):
+                m, l, acc = args
+                kb = kg[:, kj]  # (b, kc, kv, d)
+                vb = vg[:, kj]
+                kpos = kj * kc + kpos_base
+                logits = jnp.einsum(
+                    "bqkrd,bckd->bkrqc", qb, kb
+                ).astype(jnp.float32) * scale
+                if softcap is not None:
+                    logits = softcap * jnp.tanh(logits / softcap)
+                ok = jnp.ones((qc, kc), dtype=bool)
+                if causal:
+                    ok &= kpos[None, :] <= qpos[:, None]
+                if window is not None:
+                    ok &= kpos[None, :] > qpos[:, None] - window
+                ok &= (kpos[None, :] < sk)  # key padding
+                logits = jnp.where(ok[None, None, None], logits, NEG)
+                m2 = jnp.maximum(m, logits.max(-1))
+                p = jnp.exp(logits - m2[..., None])
+                alpha = jnp.exp(m - m2)
+                l2 = alpha * l + p.sum(-1)
+                if pv_bf16:
+                    pv = jax.lax.dot_general(
+                        p.astype(jnp.bfloat16), vb.astype(jnp.bfloat16),
+                        (((4,), (1,)), ((0, 1), (0, 2))),
+                        preferred_element_type=jnp.float32,
+                    )  # (b, kv, rep, qc, d)
+                else:
+                    pv = jnp.einsum(
+                        "bkrqc,bckd->bkrqd", p, vb.astype(jnp.float32)
+                    )
+                acc2 = alpha[..., None] * acc + pv
+                return m2, l2, acc2
+
+            if causal or window is not None:
+                lo = qpos[0]
+                hi = qpos[-1]
+                skip = jnp.zeros((), dtype=bool)
+                if causal:
+                    skip |= kj * kc > hi  # block entirely above diagonal
+                if window is not None:
+                    skip |= (kj + 1) * kc - 1 <= lo - window
+                m, l, acc = jax.lax.cond(
+                    skip, lambda args: args, compute, (m, l, acc)
+                )
+            else:
+                m, l, acc = compute((m, l, acc))
+            return (m, l, acc), None
+
+        init = (
+            jnp.full((b, kv, rep, qc), NEG, dtype=jnp.float32),
+            jnp.zeros((b, kv, rep, qc), dtype=jnp.float32),
+            jnp.zeros((b, kv, rep, qc, dv), dtype=jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(k_block, init, jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)  # (b, kv, rep, qc, d)
+
+    _, blocks = jax.lax.scan(q_block, None, jnp.arange(nq))
+    # blocks: (nq, b, kv, rep, qc, dv) → (b, sq, h, dv)
+    out = jnp.moveaxis(blocks, 0, 3)  # (b, kv, rep, nq, qc, dv)
+    out = out.reshape(b, kv, rep, nq * qc, dv)[:, :, :, :sq, :]
+    out = jnp.moveaxis(out.reshape(b, h, sq, dv), 1, 2)
+    return out

@@ -1,0 +1,93 @@
+"""Shared model layers (pure functions over param pytrees, no framework)."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "rms_norm", "rope", "apply_rope", "mlp_params", "mlp_apply",
+    "softcap", "dense_init", "Params",
+]
+
+Params = Dict[str, Any]
+
+
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def dense_init(key, shape, scale: Optional[float] = None, dtype=jnp.bfloat16):
+    fan_in = shape[0] if len(shape) > 1 else shape[0]
+    scale = scale if scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# rotary embeddings
+# --------------------------------------------------------------------------- #
+def rope(positions: jnp.ndarray, head_dim: int, theta: float
+         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """positions: (...,) int32 → cos/sin of shape (..., head_dim//2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, H, D); cos/sin: (B, S, D//2) or (S, D//2)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(dt)
+
+
+# --------------------------------------------------------------------------- #
+# MLP (gated / plain)
+# --------------------------------------------------------------------------- #
+def mlp_params(key, d: int, ff: int, activation: str, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {"wo": dense_init(ks[2], (ff, d), dtype=dtype)}
+    if activation in ("silu", "geglu"):
+        p["wi"] = dense_init(ks[0], (d, ff), dtype=dtype)
+        p["wg"] = dense_init(ks[1], (d, ff), dtype=dtype)
+    else:
+        p["wi"] = dense_init(ks[0], (d, ff), dtype=dtype)
+    return p
+
+
+def mlp_apply(p: Params, x: jnp.ndarray, activation: str) -> jnp.ndarray:
+    from repro.sharding.act import constrain
+
+    h = constrain(x @ p["wi"], "btf")
+    if activation == "silu":
+        h = jax.nn.silu(h) * constrain(x @ p["wg"], "btf")
+    elif activation == "geglu":
+        h = jax.nn.gelu(h) * constrain(x @ p["wg"], "btf")
+    else:
+        h = jax.nn.gelu(h)
+    return constrain(h @ p["wo"], "btd")

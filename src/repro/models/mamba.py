@@ -1,0 +1,173 @@
+"""Mamba2 SSD (state-space duality) block [arXiv:2405.21060].
+
+Chunked SSD form: within a chunk the output is an attention-like quadratic
+term (MXU-friendly); across chunks a small recurrent state (H, P, N) is
+carried with ``jax.lax.scan``.  Decode is the O(1) recurrent step.
+
+Simplifications vs. the reference CUDA kernel (recorded in DESIGN.md):
+single B/C group shared across heads (n_groups=1), short conv applied to x
+only, no bias terms.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import Params, dense_init, rms_norm
+
+__all__ = ["ssm_params", "ssm_apply", "ssm_decode", "init_ssm_cache"]
+
+CONV_W = 4
+
+
+def ssm_params(key, cfg: ArchConfig, dtype) -> Params:
+    d = cfg.d_model
+    h, p_dim, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    d_in = h * p_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "wx": dense_init(ks[0], (d, d_in), dtype=dtype),
+        "wz": dense_init(ks[1], (d, d_in), dtype=dtype),
+        "wB": dense_init(ks[2], (d, n), dtype=dtype),
+        "wC": dense_init(ks[3], (d, n), dtype=dtype),
+        "wdt": dense_init(ks[4], (d, h), dtype=dtype),
+        "dt_bias": jnp.zeros((h,), dtype=jnp.float32),
+        "A_log": jnp.zeros((h,), dtype=jnp.float32),
+        "D": jnp.ones((h,), dtype=jnp.float32),
+        "conv": dense_init(ks[5], (CONV_W, d_in), scale=0.5, dtype=dtype),
+        "norm": jnp.zeros((d_in,), dtype=dtype),
+        "wo": dense_init(ks[6], (d_in, d), dtype=dtype),
+    }
+
+
+def _conv1d(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Causal depthwise conv; x: (B,S,D), w: (W,D)."""
+    pads = [(0, 0), (CONV_W - 1, 0), (0, 0)]
+    xp = jnp.pad(x, pads)
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(CONV_W))
+    return jax.nn.silu(out)
+
+
+def _ssd_chunk_scan(x, dt, A, B, C, chunk: int):
+    """SSD chunked algorithm.
+
+    x: (b, s, h, p); dt: (b, s, h); A: (h,); B,C: (b, s, n).
+    Returns y: (b, s, h, p), final_state: (b, h, p, n).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+
+    da = dtc * A[None, None, None, :]  # (b,nc,l,h) log-decay increments
+    cum = jnp.cumsum(da, axis=2)  # within-chunk cumulative
+    total = cum[:, :, -1, :]  # (b,nc,h)
+
+    # intra-chunk (quadratic, attention-like): y_t += C_t·Σ_{u<=t} exp(cum_t−cum_u)·dt_u·B_u·x_u
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (b,nc,t,u,h)
+    causal = jnp.tril(jnp.ones((chunk, chunk), dtype=bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bctn,bcun->bctu", Cc.astype(jnp.float32),
+                    Bc.astype(jnp.float32))
+    att = cb[:, :, :, :, None] * decay * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bctuh,bcuhp->bcthp", att, xc.astype(jnp.float32))
+
+    # chunk-boundary states: S_c = Σ_u exp(total−cum_u)·dt_u·B_u⊗x_u
+    decay_out = jnp.exp(total[:, :, None, :] - cum)  # (b,nc,l,h)
+    dBx = jnp.einsum(
+        "bclh,bcln,bclhp->bchpn",
+        (dtc * decay_out).astype(jnp.float32),
+        Bc.astype(jnp.float32),
+        xc.astype(jnp.float32),
+    )
+
+    # inter-chunk recurrence over nc chunks
+    def step(state, inp):
+        dbx, tot = inp  # (b,h,p,n), (b,h)
+        new = state * jnp.exp(tot)[:, :, None, None] + dbx
+        return new, state  # emit state *entering* the chunk
+
+    init = jnp.zeros((b, h, p, n), dtype=jnp.float32)
+    final, entering = jax.lax.scan(
+        step,
+        init,
+        (jnp.moveaxis(dBx, 1, 0), jnp.moveaxis(total, 1, 0)),
+    )
+    entering = jnp.moveaxis(entering, 0, 1)  # (b,nc,h,p,n)
+
+    # inter-chunk contribution: y_t += C_t · exp(cum_t) · S_entering
+    y_inter = jnp.einsum(
+        "bctn,bchpn,bcth->bcthp",
+        Cc.astype(jnp.float32),
+        entering,
+        jnp.exp(cum),
+    )
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, final
+
+
+def ssm_apply(p: Params, cfg: ArchConfig, u: jnp.ndarray
+              ) -> jnp.ndarray:
+    """u: (B, S, d) → (B, S, d)."""
+    b, s, d = u.shape
+    h, pd, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    chunk = min(cfg.ssm_chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    x = _conv1d(u @ p["wx"], p["conv"]).reshape(b, s, h, pd)
+    z = u @ p["wz"]
+    B = u @ p["wB"]
+    C = u @ p["wC"]
+    dt = jax.nn.softplus(
+        (u @ p["wdt"]).astype(jnp.float32) + p["dt_bias"]
+    )
+    A = -jnp.exp(p["A_log"])
+    y, _ = _ssd_chunk_scan(x, dt, A, B, C, chunk)
+    y = y + x.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(b, s, h * pd).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["wo"]
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int, dtype, n_ssm_layers: int):
+    h, pd, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    d_in = h * pd
+    return {
+        "state": jnp.zeros((n_ssm_layers, batch, h, pd, n), dtype=jnp.float32),
+        "conv": jnp.zeros((n_ssm_layers, batch, CONV_W - 1, d_in), dtype=dtype),
+    }
+
+
+def ssm_decode(p: Params, cfg: ArchConfig, u: jnp.ndarray, cache: Dict
+               ) -> Tuple[jnp.ndarray, Dict]:
+    """One-token recurrent step.  u: (B,1,d); cache: {state, conv} for this
+    layer — state (B,h,p,n), conv (B,W-1,d_in)."""
+    b = u.shape[0]
+    h, pd, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    xin = (u @ p["wx"])[:, 0]  # (B, d_in)
+    hist = jnp.concatenate([cache["conv"], xin[:, None, :]], axis=1)
+    x = jax.nn.silu(
+        sum(hist[:, i, :] * p["conv"][i] for i in range(CONV_W))
+    ).reshape(b, h, pd)
+    new_conv = hist[:, 1:, :]
+    z = (u @ p["wz"])[:, 0]
+    B = (u @ p["wB"])[:, 0].astype(jnp.float32)
+    C = (u @ p["wC"])[:, 0].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        (u @ p["wdt"])[:, 0].astype(jnp.float32) + p["dt_bias"]
+    )
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A[None, :])  # (B,h)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt, B, x.astype(jnp.float32))
+    state = cache["state"] * decay[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", C, state)
+    y = y + x.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(b, h * pd).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return (y @ p["wo"])[:, None, :], {"state": state, "conv": new_conv}

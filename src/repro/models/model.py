@@ -1,0 +1,182 @@
+"""Model-level API: params init, loss, train / prefill / decode steps.
+
+Input conventions per family (DESIGN.md §Arch-applicability):
+
+* LM families (dense/moe/ssm/hybrid): ``tokens``/``labels`` (B, S) int32.
+* ``vlm`` / ``audio``: the modality frontend is a STUB — train/prefill take
+  precomputed patch/frame ``embeds`` (B, S, d_model) plus (B, S) labels.
+* encoder-only (hubert): bidirectional attention, no decode path.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.layers import Params, dense_init, rms_norm, softcap
+from repro.models.transformer import (
+    build_segments,
+    decode_segments,
+    forward_segments,
+    init_segment_caches,
+    segment_params,
+)
+
+__all__ = [
+    "init_params", "abstract_params", "loss_fn", "prefill", "decode_step",
+    "init_caches", "batch_spec", "uses_embeds",
+]
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def uses_embeds(cfg: ArchConfig) -> bool:
+    return cfg.family in ("vlm", "audio")
+
+
+# --------------------------------------------------------------------------- #
+# params
+# --------------------------------------------------------------------------- #
+def init_params(cfg: ArchConfig, key) -> Params:
+    dt = _dtype(cfg)
+    segs = build_segments(cfg)
+    keys = jax.random.split(key, len(segs) + 3)
+    params: Params = {
+        "embed": dense_init(keys[0], (cfg.vocab, cfg.d_model), scale=1.0,
+                            dtype=dt),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype=dt),
+        "segments": [
+            segment_params(keys[2 + i], cfg, seg, dt)
+            for i, seg in enumerate(segs)
+        ],
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(
+            keys[1], (cfg.d_model, cfg.vocab), dtype=dt
+        )
+    return params
+
+
+def abstract_params(cfg: ArchConfig) -> Params:
+    """ShapeDtypeStruct tree (no allocation) — dry-run input."""
+    return jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0))
+    )
+
+
+# --------------------------------------------------------------------------- #
+# forward
+# --------------------------------------------------------------------------- #
+def _backbone(params: Params, cfg: ArchConfig, x, positions, causal, remat,
+              scan_unroll: bool = False):
+    segs = build_segments(cfg)
+    x = forward_segments(params["segments"], cfg, segs, x, positions,
+                         causal=causal, remat=remat, unroll=scan_unroll)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def _logits(params: Params, cfg: ArchConfig, x) -> jnp.ndarray:
+    from repro.sharding.act import constrain
+
+    head = (
+        params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    )
+    logits = constrain(x @ head, "logits")
+    return softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+
+
+def _embed_inputs(params: Params, cfg: ArchConfig, batch: Dict[str, Any]):
+    from repro.sharding.act import constrain
+
+    if uses_embeds(cfg):
+        return constrain(batch["embeds"].astype(_dtype(cfg)), "btd")
+    return constrain(
+        jnp.take(params["embed"], batch["tokens"], axis=0), "btd"
+    )
+
+
+def loss_fn(params: Params, cfg: ArchConfig, batch: Dict[str, Any],
+            remat: str = "full", scan_unroll: bool = False) -> jnp.ndarray:
+    x = _embed_inputs(params, cfg, batch)
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    causal = not cfg.encoder_only
+    x = _backbone(params, cfg, x, positions, causal, remat, scan_unroll)
+    logits = _logits(params, cfg, x)
+    labels = batch["labels"]
+    # Sharding-friendly CE: take_along_axis over a vocab-sharded logits
+    # tensor forces XLA to all-gather the whole (B,S,V) f32 array; the
+    # iota==label masked reduction keeps the vocab axis sharded (the only
+    # cross-shard traffic is the (B,S) partial sums).
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    label_logit = jnp.sum(
+        jnp.where(vocab_iota == labels[..., None], logits, 0.0), axis=-1
+    )
+    nll = lse - label_logit
+    mask = (labels >= 0).astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def prefill(params: Params, cfg: ArchConfig, batch: Dict[str, Any],
+            remat: str = "none", scan_unroll: bool = False) -> jnp.ndarray:
+    """Full-sequence forward returning last-position logits (B, vocab)."""
+    x = _embed_inputs(params, cfg, batch)
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    x = _backbone(params, cfg, x, positions, not cfg.encoder_only, remat,
+                  scan_unroll)
+    return _logits(params, cfg, x[:, -1:, :])[:, 0]
+
+
+# --------------------------------------------------------------------------- #
+# decode
+# --------------------------------------------------------------------------- #
+def init_caches(cfg: ArchConfig, batch: int, max_len: int):
+    segs = build_segments(cfg)
+    return init_segment_caches(cfg, segs, batch, max_len, _dtype(cfg))
+
+
+def decode_step(params: Params, caches, cfg: ArchConfig,
+                tokens: jnp.ndarray, pos: jnp.ndarray,
+                scan_unroll: bool = False) -> Tuple[jnp.ndarray, Any]:
+    """tokens: (B, 1) int32; pos: (B,) current lengths → (logits, caches)."""
+    segs = build_segments(cfg)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x, new_caches = decode_segments(params["segments"], caches, cfg, segs,
+                                    x, pos, unroll=scan_unroll)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _logits(params, cfg, x)[:, 0], new_caches
+
+
+# --------------------------------------------------------------------------- #
+# input specs
+# --------------------------------------------------------------------------- #
+def batch_spec(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    f32 = jnp.dtype(_dtype(cfg))
+    i32 = jnp.int32
+    if shape.kind == "decode":
+        spec: Dict[str, Any] = {
+            "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+            "pos": jax.ShapeDtypeStruct((b,), i32),
+        }
+        return spec
+    if uses_embeds(cfg):
+        spec = {
+            "embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), f32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+        }
+    else:
+        spec = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+        }
+    return spec

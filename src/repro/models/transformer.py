@@ -1,0 +1,255 @@
+"""Block/segment assembly: every assigned architecture is a stack of
+homogeneous *segments* scanned with ``jax.lax.scan`` (compile-time O(1) in
+depth).  A segment repeats a short *period* of blocks — e.g. gemma2 scans 23
+(local, global) periods, zamba2 scans (5×ssm, attn) periods — so mixed-kind
+architectures still scan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import mamba
+from repro.models import moe as moe_mod
+from repro.models.layers import Params, mlp_apply, mlp_params, rms_norm
+
+__all__ = ["BlockSpec", "build_segments", "segment_params", "forward_segments",
+           "decode_segments", "init_segment_caches"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    kind: str  # "attn" | "local" | "ssm"
+    moe: bool
+    mlp: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentSpec:
+    pattern: Tuple[BlockSpec, ...]
+    repeats: int
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.pattern) * self.repeats
+
+
+def _block_spec(cfg: ArchConfig, i: int) -> BlockSpec:
+    kind = cfg.layer_kind(i)
+    is_moe = cfg.is_moe and i >= cfg.first_dense_layers
+    has_mlp = kind != "ssm" and (cfg.d_ff > 0 or is_moe)
+    return BlockSpec(kind, is_moe, has_mlp)
+
+
+def build_segments(cfg: ArchConfig) -> List[SegmentSpec]:
+    specs = [_block_spec(cfg, i) for i in range(cfg.n_layers)]
+    if cfg.family == "hybrid":
+        period = max(cfg.hybrid_attn_period, 1)
+    elif cfg.is_moe:
+        period = 1
+    else:
+        period = len(cfg.layer_pattern)
+    segments: List[SegmentSpec] = []
+    i = 0
+    while i < len(specs):
+        # longest run of repeated periods starting at i
+        pat = tuple(specs[i : i + period])
+        if len(pat) < period:
+            pat = tuple(specs[i:])
+        r = 1
+        while specs[i + r * len(pat) : i + (r + 1) * len(pat)] == list(pat):
+            r += 1
+        segments.append(SegmentSpec(pat, r))
+        i += r * len(pat)
+    return segments
+
+
+# --------------------------------------------------------------------------- #
+# params
+# --------------------------------------------------------------------------- #
+def _one_block_params(key, cfg: ArchConfig, spec: BlockSpec, dtype,
+                      skip_shared: bool = False) -> Params:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: Params = {"ln1": jnp.zeros((d,), dtype=dtype)}
+    if spec.kind == "ssm":
+        p["mixer"] = mamba.ssm_params(ks[0], cfg, dtype)
+    elif not skip_shared:
+        if cfg.mla:
+            p["mixer"] = attn.mla_params(ks[0], cfg, dtype)
+        else:
+            p["mixer"] = attn.gqa_params(ks[0], cfg, dtype)
+    if spec.mlp:
+        p["ln2"] = jnp.zeros((d,), dtype=dtype)
+        if not skip_shared or spec.kind == "ssm":
+            if spec.moe:
+                p["mlp"] = moe_mod.moe_params(ks[1], cfg, dtype)
+            else:
+                ff = cfg.d_ff
+                if cfg.is_moe:  # dense layers of a MoE arch match active width
+                    ff = cfg.d_ff * max(cfg.top_k + cfg.n_shared_experts, 1)
+                p["mlp"] = mlp_params(ks[1], d, ff, cfg.activation, dtype)
+    return p
+
+
+def _shares_weights(cfg: ArchConfig, spec: BlockSpec) -> bool:
+    return cfg.shared_attn and spec.kind != "ssm"
+
+
+def segment_params(key, cfg: ArchConfig, seg: SegmentSpec, dtype) -> Params:
+    """Stacked params: each period-position's block params get a leading
+    ``repeats`` dimension (scanned).  Weight-shared blocks (zamba2's shared
+    attention) keep their mixer/MLP once, under ``shared``."""
+    keys = jax.random.split(key, seg.repeats * len(seg.pattern)).reshape(
+        seg.repeats, len(seg.pattern), 2
+    )
+    blocks, shared = [], {}
+    for j, spec in enumerate(seg.pattern):
+        skip = _shares_weights(cfg, spec)
+        stacked = jax.vmap(
+            lambda k, spec=spec, skip=skip: _one_block_params(
+                k, cfg, spec, dtype, skip_shared=skip
+            )
+        )(keys[:, j])
+        blocks.append(stacked)
+        if skip:
+            one = _one_block_params(keys[0, j], cfg, spec, dtype)
+            shared[str(j)] = {
+                k: v for k, v in one.items() if k in ("mixer", "mlp")
+            }
+    out: Params = {"blocks": blocks}
+    if shared:
+        out["shared"] = shared
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# forward (train / prefill)
+# --------------------------------------------------------------------------- #
+def _apply_block(p: Params, cfg: ArchConfig, spec: BlockSpec, x, positions,
+                 causal: bool):
+    from repro.sharding.act import constrain
+
+    x = constrain(x, "btd")
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if spec.kind == "ssm":
+        mixed = mamba.ssm_apply(p["mixer"], cfg, h)
+    elif cfg.mla:
+        mixed = attn.mla_apply(p["mixer"], cfg, h, positions,
+                               local=spec.kind == "local", causal=causal)
+    else:
+        mixed = attn.gqa_apply(p["mixer"], cfg, h, positions,
+                               local=spec.kind == "local", causal=causal)
+    x = x + mixed
+    if spec.mlp:
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if spec.moe:
+            x = x + moe_mod.moe_apply(p["mlp"], cfg, h2)
+        else:
+            x = x + mlp_apply(p["mlp"], h2, cfg.activation)
+    return x
+
+
+def forward_segments(params_segs, cfg: ArchConfig, segs: List[SegmentSpec],
+                     x, positions, causal: bool = True,
+                     remat: str = "full", unroll: bool = False) -> jnp.ndarray:
+    for seg, seg_params in zip(segs, params_segs):
+        shared = seg_params.get("shared", {})
+
+        def period_body(carry, layer_params, seg=seg, shared=shared):
+            y = carry
+            for j, spec in enumerate(seg.pattern):
+                p = layer_params["blocks"][j]
+                if str(j) in shared:
+                    p = {**p, **shared[str(j)]}
+                y = _apply_block(p, cfg, spec, y, positions, causal)
+            return y, None
+
+        if remat == "full":
+            period_body = jax.checkpoint(
+                period_body, prevent_cse=False
+            )
+        elif remat == "dots":
+            period_body = jax.checkpoint(
+                period_body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+                prevent_cse=False,
+            )
+        # unroll=True: exact per-layer costs in cost_analysis() (a scanned
+        # while-body is otherwise counted once, not ×trips) — used by the
+        # dry-run; the trainer keeps the compact scan.
+        x, _ = jax.lax.scan(
+            lambda c, lp: period_body(c, lp), x,
+            {"blocks": seg_params["blocks"]},
+            unroll=seg.repeats if unroll else 1,
+        )
+    return x
+
+
+# --------------------------------------------------------------------------- #
+# decode (single token, cached)
+# --------------------------------------------------------------------------- #
+def init_segment_caches(cfg: ArchConfig, segs, batch: int, max_len: int,
+                        dtype) -> List[Params]:
+    caches = []
+    for seg in segs:
+        c = {"blocks": []}
+        for spec in seg.pattern:
+            if spec.kind == "ssm":
+                one = mamba.init_ssm_cache(cfg, batch, dtype, seg.repeats)
+            else:
+                one = attn.init_kv_cache(cfg, batch, max_len, dtype, seg.repeats)
+                # drop the layer axis added by init_kv_cache helper signature
+            c["blocks"].append(one)
+        caches.append(c)
+    return caches
+
+
+def decode_segments(params_segs, caches, cfg: ArchConfig, segs, x, pos,
+                    unroll: bool = False) -> Tuple[jnp.ndarray, List]:
+    """x: (B,1,d); pos: (B,) current length.  Returns (x, new_caches)."""
+    new_caches = []
+    for seg, seg_params, seg_cache in zip(segs, params_segs, caches):
+        shared = seg_params.get("shared", {})
+
+        def body(carry, xs, seg=seg, shared=shared):
+            y = carry
+            layer_params, layer_cache = xs
+            new_lc = []
+            for j, spec in enumerate(seg.pattern):
+                p = layer_params["blocks"][j]
+                if str(j) in shared:
+                    p = {**p, **shared[str(j)]}
+                c = layer_cache["blocks"][j]
+                h = rms_norm(y, p["ln1"], cfg.norm_eps)
+                if spec.kind == "ssm":
+                    mixed, c2 = mamba.ssm_decode(p["mixer"], cfg, h, c)
+                elif cfg.mla:
+                    mixed, c2 = attn.mla_decode(p["mixer"], cfg, h, c, pos,
+                                                local=spec.kind == "local")
+                else:
+                    mixed, c2 = attn.gqa_decode(p["mixer"], cfg, h, c, pos,
+                                                local=spec.kind == "local")
+                y = y + mixed
+                if spec.mlp:
+                    h2 = rms_norm(y, p["ln2"], cfg.norm_eps)
+                    if spec.moe:
+                        y = y + moe_mod.moe_apply(p["mlp"], cfg, h2)
+                    else:
+                        y = y + mlp_apply(p["mlp"], h2, cfg.activation)
+                new_lc.append(c2)
+            return y, {"blocks": new_lc}
+
+        x, updated = jax.lax.scan(
+            body, x, ({"blocks": seg_params["blocks"]}, seg_cache),
+            unroll=seg.repeats if unroll else 1,
+        )
+        new_caches.append(updated)
+    return x, new_caches

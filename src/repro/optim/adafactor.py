@@ -1,0 +1,86 @@
+"""Adafactor (factored second moment, β1=0) — O(sum-of-dims) optimizer state,
+used for the 671B-scale config where Adam moments would not fit HBM."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["adafactor_init", "adafactor_update"]
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2
+
+
+def adafactor_init(params: Any) -> Dict[str, Any]:
+    def init(p):
+        if _factored(p.shape):
+            row = jnp.zeros(p.shape[:-1], dtype=jnp.float32)
+            col = jnp.zeros(p.shape[:-2] + p.shape[-1:], dtype=jnp.float32)
+            return {"row": row, "col": col}
+        return {"v": jnp.zeros(p.shape, dtype=jnp.float32)}
+
+    return {
+        "stats": jax.tree_util.tree_map(
+            init, params, is_leaf=lambda x: hasattr(x, "shape")
+        ),
+        "count": jnp.zeros((), dtype=jnp.int32),
+    }
+
+
+def adafactor_update(
+    params: Any,
+    grads: Any,
+    state: Dict[str, Any],
+    lr: jnp.ndarray,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+) -> Tuple[Any, Dict[str, Any]]:
+    count = state["count"] + 1
+    beta2 = 1.0 - count.astype(jnp.float32) ** -decay
+
+    def upd(p, g, s):
+        g32 = g.astype(jnp.float32)
+        g2 = g32 * g32 + eps
+        if _factored(p.shape):
+            row = beta2 * s["row"] + (1 - beta2) * g2.mean(axis=-1)
+            col = beta2 * s["col"] + (1 - beta2) * g2.mean(axis=-2)
+            row_mean = row.mean(axis=-1, keepdims=True)
+            vhat = (row / jnp.maximum(row_mean, eps))[..., None] * col[..., None, :]
+            new_s = {"row": row, "col": col}
+        else:
+            vhat = beta2 * s["v"] + (1 - beta2) * g2
+            new_s = {"v": vhat}
+        u = g32 * jax.lax.rsqrt(vhat + eps)
+        norm = jnp.sqrt(jnp.mean(u * u))
+        u = u / jnp.maximum(1.0, norm / clip_threshold)
+        step = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), new_s
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    stats_leaves = []
+    # stats tree has dict leaves; re-flatten against params structure
+    def collect(s):
+        stats_leaves.append(s)
+    jax.tree_util.tree_map(
+        lambda p: None, params
+    )
+    flat_s = _flatten_stats(state["stats"], params)
+    out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_stats = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    return new_p, {"stats": new_stats, "count": count}
+
+
+def _flatten_stats(stats: Any, params: Any):
+    flat_p, _ = jax.tree_util.tree_flatten(params)
+    is_stat = lambda x: isinstance(x, dict) and ("v" in x or "row" in x)
+    flat_s = jax.tree_util.tree_leaves(stats, is_leaf=is_stat)
+    assert len(flat_s) == len(flat_p)
+    return flat_s

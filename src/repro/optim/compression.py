@@ -1,0 +1,54 @@
+"""Int8 gradient compression with error feedback.
+
+At multi-pod scale the cross-pod (DCI) all-reduce is the thinnest link; 4×
+compression of the gradient payload with per-tensor scale + residual error
+feedback is the standard trick (1-bit Adam / DALL·E-style EF).  The codec is
+exposed as a pure transform so the trainer can apply it to the cross-pod
+segment of the reduction; tests assert the EF residual keeps the compressed
+sum unbiased over steps.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compress", "decompress", "ef_compress_grads"]
+
+
+def compress(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_grads(grads: Any, residual: Any) -> Tuple[Any, Any]:
+    """Quantize (grads + residual) to int8; returns (dequantized grads for
+    the optimizer, new residual).  Residual carries quantization error to
+    the next step (error feedback) so the long-run update is unbiased."""
+
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        q, s = compress(x)
+        deq = decompress(q, s)
+        return deq.astype(g.dtype), x - deq
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_r = jax.tree_util.tree_leaves(residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (
+        jax.tree_util.tree_unflatten(tdef, [o[0] for o in out]),
+        jax.tree_util.tree_unflatten(tdef, [o[1] for o in out]),
+    )
+
+
+def init_residual(grads_like: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, dtype=jnp.float32), grads_like
+    )

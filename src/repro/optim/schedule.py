@@ -1,0 +1,30 @@
+"""LR schedules + global-norm clipping."""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["warmup_cosine", "clip_by_global_norm"]
+
+
+def warmup_cosine(step: jnp.ndarray, peak: float, warmup: int, total: int,
+                  floor: float = 0.1) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    warm = peak * (s + 1.0) / jnp.maximum(warmup, 1)
+    frac = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(s < warmup, warm, cos)
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jnp.ndarray]:
+    leaves = jax.tree_util.tree_leaves(grads)
+    total = jnp.sqrt(
+        sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves)
+    )
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(total, 1e-12))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads
+    ), total

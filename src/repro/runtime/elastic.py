@@ -1,0 +1,43 @@
+"""Elastic scaling: re-mesh and reshard a training state between device
+counts (grow after repair, shrink after eviction).
+
+The state is brought to host (from the last checkpoint in the real flow),
+the new mesh is built, and every leaf is re-placed under the sharding rules
+for the new mesh.  Data-parallel batch is re-split by the caller (global
+batch stays fixed; per-device batch changes).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.sharding.axes import param_specs
+
+__all__ = ["reshard_state", "elastic_remesh_plan"]
+
+
+def elastic_remesh_plan(old_devices: int, new_devices: int,
+                        model_parallel: int) -> Tuple[int, int]:
+    """(data_parallel, model_parallel) for the new device count; model
+    parallelism is preserved (weights layout), data parallelism absorbs the
+    change."""
+    assert new_devices % model_parallel == 0, (
+        f"{new_devices} devices cannot keep model={model_parallel}"
+    )
+    return new_devices // model_parallel, model_parallel
+
+
+def reshard_state(state: Any, new_mesh: Mesh) -> Any:
+    """Re-place every leaf of ``state`` for ``new_mesh`` (host round-trip —
+    the checkpoint path in production; device-to-device for tests)."""
+    specs = param_specs(state, new_mesh)
+
+    def place(leaf, sharding):
+        host = np.asarray(leaf)
+        return jax.device_put(host, sharding)
+
+    return jax.tree_util.tree_map(place, state, specs)

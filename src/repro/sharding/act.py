@@ -1,0 +1,93 @@
+"""Activation sharding constraints.
+
+XLA SPMD propagation sometimes resolves an (FSDP-sharded weight ×
+batch-sharded activation) matmul by all-gathering the *activation* batch —
+e.g. a 40 GB gather of (B, S, V) logits instead of a 0.6 GB weight gather.
+Model code calls :func:`constrain` at block boundaries with a semantic kind;
+the active mesh (set by the trainer/dry-run via :func:`activation_sharding`)
+turns that into ``with_sharding_constraint``.  Without an active context the
+calls are no-ops (CPU smoke tests).
+
+``seq_parallel`` switches batch-dim sharding to sequence-dim sharding for
+the batch=1 long-context cells.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["activation_sharding", "constrain"]
+
+_CTX = threading.local()
+
+
+@contextmanager
+def activation_sharding(mesh: Mesh, seq_parallel: bool = False):
+    prev = getattr(_CTX, "state", None)
+    _CTX.state = (mesh, seq_parallel)
+    try:
+        yield
+    finally:
+        _CTX.state = prev
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        s = 1
+        for n in name:
+            s *= mesh.shape[n]
+        return s
+    return mesh.shape[name]
+
+
+# kind → per-dim logical roles; "b"=batch, "s"=sequence, "m"=model/TP, None
+_KINDS = {
+    "btd": ("b", "s", None),          # (B, S, d_model)
+    "bshd": ("b", "s", "m", None),    # (B, S, heads, head_dim)
+    "btf": ("b", "s", "m"),           # (B, S, d_ff | H*hd fused)
+    "logits": ("b", "s", "m"),        # (B, S, vocab)
+    "ged": ("b", "m", None, None),    # (G, E, C, d) moe expert buffers
+    "gsd": ("b", None, None),         # (G, S_g, d) moe group tokens
+    "bhst": ("b", "m", None, None),   # (B, H, Sq, Sk) attention scores
+    "bshr": ("b", "s", "m", None),    # (B, S, H, latent) MLA q_eff/ctx
+}
+
+
+def constrain(x: jax.Array, kind: str) -> jax.Array:
+    state = getattr(_CTX, "state", None)
+    if state is None:
+        return x
+    mesh, seq_parallel = state
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data")) or None
+    tp = "model" if "model" in mesh.axis_names else None
+    roles = _KINDS[kind]
+    if len(roles) != x.ndim:
+        return x
+    spec = []
+    for dim, role in zip(x.shape, roles):
+        name = None
+        if role == "b":
+            name = None if seq_parallel else dp
+        elif role == "s":
+            name = dp if seq_parallel else None
+        elif role == "m":
+            name = tp
+        if name is not None and dim % _axis_size(mesh, name) != 0:
+            name = None
+        spec.append(name)
+    if kind == "bshd" and tp is not None and spec[2] is None:
+        # few-KV-head GQA: the heads axis does not divide TP — shard the
+        # head_dim instead (keeps the projection reshape and the KV-cache
+        # scatter on one consistent layout, no involuntary regather)
+        if x.shape[3] % _axis_size(mesh, tp) == 0:
+            spec[3] = tp
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec))
+    )

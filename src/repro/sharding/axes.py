@@ -1,0 +1,193 @@
+"""Logical-axis sharding rules → PartitionSpec trees.
+
+2-D parallelism: FSDP over ``(pod, data)`` (weights' non-TP dimension), TP/EP
+over ``model``.  ``long_500k`` (batch=1) switches batch sharding to sequence
+parallelism over the data axes.  Every rule is divisibility-checked against
+the mesh; an axis that does not divide is dropped (e.g. hubert's 504-way
+vocab is not sharded 16-way).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+__all__ = ["param_specs", "batch_specs", "cache_specs", "fit_spec",
+           "dp_axes", "make_sharding"]
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        return int(np.prod([_axis_size(mesh, n) for n in name]))
+    return mesh.shape[name]
+
+
+def fit_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop sharding on dimensions the mesh does not divide."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, name in zip(shape, parts):
+        if name is not None and dim % _axis_size(mesh, name) == 0:
+            out.append(name)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def make_sharding(mesh: Mesh, spec: P, shape: Tuple[int, ...]) -> NamedSharding:
+    return NamedSharding(mesh, fit_spec(spec, shape, mesh))
+
+
+# --------------------------------------------------------------------------- #
+# parameter rules
+# --------------------------------------------------------------------------- #
+def _rule(path_names: Tuple[str, ...], ndim: int, fsdp, tp,
+          expert_axes=None) -> P:
+    leaf = path_names[-1]
+    stacked = 1 if "segments" in path_names else 0
+
+    def pad(spec: Sequence) -> P:
+        return P(*([None] * stacked + list(spec)))
+
+    base = ndim - stacked
+    ep = expert_axes or tp
+    if leaf in ("wo",) and base == 3:  # moe out: (E, ff, d)
+        return pad((ep, None, fsdp))
+    if leaf in ("wi", "wg") and base == 3:  # moe in: (E, d, ff)
+        return pad((ep, fsdp, None))
+    if leaf == "embed":
+        return P(tp, fsdp)
+    if leaf == "lm_head":
+        return P(fsdp, tp)
+    if leaf == "router":
+        return pad((fsdp, None))
+    if leaf in ("wq", "wk", "wv", "wi", "wg", "wx", "wz", "wdt",
+                "wq_a", "wq_b", "wkv_a", "wkv_b"):
+        return pad((fsdp, tp))
+    if leaf in ("wo",):
+        return pad((tp, fsdp))
+    if leaf in ("wB", "wC"):
+        return pad((fsdp, None))
+    if leaf == "conv":
+        return pad((None, tp))
+    if leaf in ("bq", "bk", "bv") and base == 1:
+        return pad((tp,))
+    # norms, scalars, biases: replicated (stacked dim unsharded)
+    return pad([None] * base)
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            names.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            names.append(f"[{p.idx}]")
+        else:
+            names.append(str(p))
+    return tuple(n for n in names if not n.startswith("["))
+
+
+def param_specs(params: Any, mesh: Mesh, multi_pod: Optional[bool] = None,
+                serving: bool = False) -> Any:
+    """Training: FSDP over (pod, data) × TP over model.  Serving
+    (``serving=True``): weights are TP-sharded only — no per-step FSDP
+    gathers — and MoE experts shard over (data × model) jointly (full
+    expert parallelism), the standard inference topology."""
+    fsdp = None if serving else (tuple(dp_axes(mesh)) or None)
+    tp = "model" if "model" in mesh.axis_names else None
+    expert_axes = None
+    if serving and tp is not None:
+        expert_axes = tuple(
+            a for a in mesh.axis_names if a in ("data", "model")
+        )
+
+    def assign(path, leaf):
+        spec = _rule(_path_names(path), len(leaf.shape), fsdp, tp,
+                     expert_axes=expert_axes)
+        return NamedSharding(mesh, fit_spec(spec, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(assign, params)
+
+
+# --------------------------------------------------------------------------- #
+# batch / cache rules
+# --------------------------------------------------------------------------- #
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig, batch: Any, mesh: Mesh
+                ) -> Any:
+    dp = dp_axes(mesh)
+    seq_parallel = shape.global_batch < _axis_size(mesh, dp)
+
+    def assign(path, leaf):
+        names = _path_names(path)
+        nd = len(leaf.shape)
+        if seq_parallel:
+            # batch too small: shard sequence dim (SP) instead
+            if nd >= 2:
+                spec = P(None, dp, *([None] * (nd - 2)))
+            else:
+                spec = P(None)
+        else:
+            spec = P(dp, *([None] * (nd - 1)))
+        return NamedSharding(mesh, fit_spec(spec, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map(
+        lambda leaf: None, batch
+    ) if batch is None else jax.tree_util.tree_map_with_path(assign, batch)
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeConfig, caches: Any, mesh: Mesh
+                ) -> Any:
+    """Decode caches: batch over dp, heads over model; for batch=1 long
+    contexts, shard the time dimension over dp (sequence parallelism)."""
+    dp = dp_axes(mesh)
+    tp = "model" if "model" in mesh.axis_names else None
+    seq_parallel = shape.global_batch < _axis_size(mesh, dp)
+
+    def assign(path, leaf):
+        names = _path_names(path)
+        nd = len(leaf.shape)
+        leaf_name = names[-1] if names else ""
+        if leaf_name == "state":  # (r, B, h, p, n)
+            spec = P(None, None if seq_parallel else dp, tp, None, None)
+        elif leaf_name == "conv":  # (r, B, W-1, d_in)
+            spec = P(None, None if seq_parallel else dp, None, tp)
+        elif nd == 6:  # gqa kv cache (r, 2, B, T, kv, hd)
+            kv, hd = leaf.shape[4], leaf.shape[5]
+            tp_size = _axis_size(mesh, tp)
+            # few-KV-head GQA: shard head_dim over TP instead (matches the
+            # activation-side fallback; keeps the cache 16-way sharded)
+            heads_ok = tp is not None and kv % tp_size == 0
+            kv_s = tp if heads_ok else None
+            hd_s = None if heads_ok else (
+                tp if tp is not None and hd % tp_size == 0 else None
+            )
+            spec = (
+                P(None, None, None, dp, kv_s, hd_s)
+                if seq_parallel
+                else P(None, None, dp, None, kv_s, hd_s)
+            )
+        elif nd == 4:  # mla latent cache (r, B, T, w) — width over TP
+            w_s = tp if tp is not None and leaf.shape[3] % _axis_size(
+                mesh, tp) == 0 else None
+            spec = (
+                P(None, None, dp, w_s)
+                if seq_parallel
+                else P(None, dp, None, w_s)
+            )
+        else:
+            spec = P(*([None] * nd))
+        return NamedSharding(mesh, fit_spec(spec, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(assign, caches)

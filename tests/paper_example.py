@@ -1,0 +1,136 @@
+"""The paper's motivating example (Tables 1–3 + the Figure-1 query) as a
+shared fixture.  String values are dictionary-encoded; the mapping below
+mirrors the paper exactly, including the ground-truth imputations N1–N9."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.plan import Aggregate, Query
+from repro.core.predicates import JoinPredicate, SelectionPredicate
+from repro.core.relation import MaskedRelation
+from repro.core.schema import ColumnSpec, Schema
+from repro.imputers.base import Imputer
+
+# dictionary encodings
+MACS = {"4fep": 1, "3a4b": 2, "25ya": 3, "fff1": 4, "9aa4": 5}
+TIMES = {"12pm": 12, "1pm": 13, "2pm": 14, "3pm": 15}
+BUILDINGS = {"DBH": 1, "ICS": 2}
+RS = frozenset({2065, 2011, 2082, 2035, 2206})
+
+# ground-truth values for N1..N9 (paper blue values)
+TRUTH = {
+    "N1": 3001, "N2": 2082, "N3": 2099,           # T.room_location
+    "N4": BUILDINGS["DBH"], "N6": BUILDINGS["ICS"], "N7": BUILDINGS["DBH"],
+    "N5": 2,                                       # S.floor
+    "N8": MACS["fff1"], "N9": MACS["9aa4"],        # U.mac_address
+}
+
+
+def paper_tables():
+    t_schema = Schema("T", [
+        ColumnSpec("T.mac_address", "int"),
+        ColumnSpec("T.time", "int"),
+        ColumnSpec("T.room_location", "int"),
+    ])
+    t = MaskedRelation.from_columns(
+        t_schema,
+        {
+            "T.mac_address": [MACS["4fep"], MACS["3a4b"], MACS["4fep"],
+                              MACS["25ya"], MACS["fff1"], MACS["9aa4"]],
+            "T.time": [TIMES["12pm"], TIMES["2pm"], TIMES["1pm"],
+                       TIMES["3pm"], TIMES["1pm"], TIMES["2pm"]],
+            "T.room_location": [2206, 0, 0, 0, 3119, 2214],
+        },
+        missing={"T.room_location": [False, True, True, True, False, False]},
+        base_table="T",
+    )
+    s_schema = Schema("S", [
+        ColumnSpec("S.room", "int"),
+        ColumnSpec("S.floor", "int"),
+        ColumnSpec("S.building", "int"),
+    ])
+    s = MaskedRelation.from_columns(
+        s_schema,
+        {
+            "S.room": [2214, 2206, 2011, 3119, 2065],
+            "S.floor": [2, 0, 2, 3, 2],
+            "S.building": [0, BUILDINGS["DBH"], BUILDINGS["DBH"], 0, 0],
+        },
+        missing={
+            "S.floor": [False, True, False, False, False],
+            "S.building": [True, False, False, True, True],
+        },
+        base_table="S",
+    )
+    u_schema = Schema("U", [
+        ColumnSpec("U.name", "int"),
+        ColumnSpec("U.email", "int"),
+        ColumnSpec("U.mac_address", "int"),
+    ])
+    u = MaskedRelation.from_columns(
+        u_schema,
+        {
+            "U.name": [1, 2, 3],  # Mike, Robert, John
+            "U.email": [1, 2, 3],
+            "U.mac_address": [0, MACS["4fep"], 0],
+        },
+        missing={"U.mac_address": [True, False, True]},
+        base_table="U",
+    )
+    return {"T": t, "S": s, "U": u}
+
+
+def paper_query() -> Query:
+    return Query(
+        tables=("T", "S", "U"),
+        selections=(
+            SelectionPredicate("S.building", "==", BUILDINGS["DBH"]),
+            SelectionPredicate("T.room_location", "in", RS),
+        ),
+        joins=(
+            JoinPredicate("T.mac_address", "U.mac_address"),
+            JoinPredicate("T.room_location", "S.room"),
+        ),
+        projection=("U.name", "T.time", "T.room_location"),
+    )
+
+
+class OracleImputer(Imputer):
+    """Imputes the paper's ground-truth values (the blue bracket values)."""
+
+    blocking = False
+    cost_per_value = 1e-3
+
+    GROUND = {
+        ("T", "T.room_location"): {1: TRUTH["N1"], 2: TRUTH["N2"], 3: TRUTH["N3"]},
+        ("S", "S.building"): {0: TRUTH["N4"], 3: TRUTH["N6"], 4: TRUTH["N7"]},
+        ("S", "S.floor"): {1: TRUTH["N5"]},
+        ("U", "U.mac_address"): {0: TRUTH["N8"], 2: TRUTH["N9"]},
+    }
+
+    def __init__(self, table_name: str):
+        self.table_name = table_name
+
+    def impute_attr(self, table, attr, tids):
+        mapping = self.GROUND.get((self.table_name, attr), {})
+        return np.asarray([mapping.get(int(t), 0) for t in tids], dtype=np.int64)
+
+
+def oracle_engine(tables):
+    """Engine with per-table oracle imputers."""
+    from repro.imputers.base import ImputationEngine
+
+    class _PerTable(Imputer):
+        blocking = False
+        cost_per_value = 1e-3
+
+        def impute_attr(self, table, attr, tids):
+            tname = attr.split(".")[0]
+            return OracleImputer(tname).impute_attr(table, attr, tids)
+
+    return ImputationEngine(tables, default=_PerTable)
+
+
+# Expected answer (paper Fig. 6-g): (Robert=2, 12pm=12, 2206)
+EXPECTED = [(2, 12, 2206)]

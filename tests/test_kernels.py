@@ -1,0 +1,151 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True on CPU) vs the
+pure-jnp oracles in repro.kernels.ref, plus hypothesis property tests for
+the bloom filter's no-false-negative invariant."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bloom import BloomFilter
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.kernels.bloom_probe import bloom_probe_pallas
+from repro.kernels.hashing import fold64, hash_positions_np
+from repro.kernels.knn_distance import masked_distance_pallas
+
+
+# --------------------------------------------------------------------------- #
+# bloom probe kernel
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("log2m", [14, 18, 20])
+@pytest.mark.parametrize("num_hashes", [2, 4, 6])
+@pytest.mark.parametrize("n", [1, 7, 1024, 5000])
+def test_bloom_probe_pallas_matches_ref(log2m, num_hashes, n):
+    rng = np.random.default_rng(log2m * 100 + num_hashes * 10 + n)
+    bits = rng.integers(0, 2**32, (1 << log2m) // 32, dtype=np.uint32)
+    keys = rng.integers(-(2**62), 2**62, n).astype(np.int64)
+    folded = jnp.asarray(fold64(keys))
+    bits_j = jnp.asarray(bits)
+    ref = np.asarray(kref.bloom_probe_ref(bits_j, folded, num_hashes, log2m))
+    pl = np.asarray(
+        bloom_probe_pallas(bits_j, folded, num_hashes=num_hashes,
+                           log2m=log2m, interpret=True)
+    )
+    np.testing.assert_array_equal(ref, pl)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    keys=st.lists(st.integers(-(2**40), 2**40), min_size=1, max_size=200),
+    probes=st.lists(st.integers(-(2**40), 2**40), min_size=1, max_size=200),
+)
+def test_bloom_no_false_negatives(keys, probes):
+    bf = BloomFilter("x", log2m=16, num_hashes=4)
+    bf.insert(np.asarray(keys, dtype=np.int64))
+    bf.mark_complete()
+    out = bf.might_contain(np.asarray(keys, dtype=np.int64))
+    assert out.all(), "bloom filter must never produce false negatives"
+    # probes of non-inserted keys may collide but mostly miss
+    out2 = bf.might_contain(np.asarray(probes, dtype=np.int64))
+    inserted = set(keys)
+    for p, hit in zip(probes, out2):
+        if p in inserted:
+            assert hit
+
+
+# --------------------------------------------------------------------------- #
+# masked knn distance kernel
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("nq,nr,d", [
+    (1, 1, 1), (3, 5, 7), (64, 64, 32), (130, 200, 96), (128, 256, 128),
+])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_masked_distance_pallas_matches_ref(nq, nr, d, dtype):
+    rng = np.random.default_rng(nq * 1000 + nr + d)
+    q = rng.normal(size=(nq, d)).astype(dtype)
+    r = rng.normal(size=(nr, d)).astype(dtype)
+    qm = (rng.random((nq, d)) > 0.35).astype(dtype)
+    rm = (rng.random((nr, d)) > 0.35).astype(dtype)
+    ref = np.asarray(kref.masked_distance_ref(
+        jnp.asarray(q), jnp.asarray(qm), jnp.asarray(r), jnp.asarray(rm)))
+    pl = np.asarray(masked_distance_pallas(
+        jnp.asarray(q), jnp.asarray(qm), jnp.asarray(r), jnp.asarray(rm),
+        interpret=True))
+    assert ref.shape == pl.shape == (nq, nr)
+    finite = np.isfinite(ref)
+    np.testing.assert_array_equal(finite, np.isfinite(pl))
+    np.testing.assert_allclose(ref[finite], pl[finite], rtol=2e-4, atol=2e-4)
+
+
+def test_masked_knn_neighbours_agree():
+    rng = np.random.default_rng(0)
+    q = rng.normal(size=(32, 24)).astype(np.float32)
+    r = rng.normal(size=(100, 24)).astype(np.float32)
+    qm = (rng.random((32, 24)) > 0.3).astype(np.float32)
+    rm = (rng.random((100, 24)) > 0.3).astype(np.float32)
+    d_ref, i_ref = kref.masked_knn_ref(q, qm, r, rm, k=5)
+    d_pl, i_pl = kops.masked_knn(q, qm, r, rm, k=5, impl="pallas")
+    np.testing.assert_allclose(
+        np.asarray(d_ref), np.asarray(d_pl), rtol=1e-3, atol=1e-3
+    )
+    # neighbour sets may differ only at distance ties
+    same = np.asarray(i_ref) == np.asarray(i_pl)
+    frac = same.mean()
+    assert frac > 0.95
+
+
+def test_hash_positions_consistent_numpy_vs_jnp():
+    keys = np.array([0, 1, -1, 2**40, -(2**40), 12345], dtype=np.int64)
+    pos_np = hash_positions_np(keys, 4, 20)
+    folded = jnp.asarray(fold64(keys))
+    bits = jnp.zeros((1 << 20) // 32, dtype=jnp.uint32)
+    # insert via numpy positions, probe via jnp path: full agreement
+    arr = np.zeros((1 << 20) // 32, dtype=np.uint32)
+    np.bitwise_or.at(arr, pos_np.ravel() >> 5,
+                     np.uint32(1) << (pos_np.ravel() & 31))
+    hit = kref.bloom_probe_ref(jnp.asarray(arr), folded, 4, 20)
+    assert np.asarray(hit).all()
+
+
+# --------------------------------------------------------------------------- #
+# flash attention kernel
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("b,s,h,kv,d", [
+    (1, 16, 2, 1, 8), (2, 64, 4, 2, 16), (1, 96, 8, 2, 32), (2, 100, 4, 4, 16),
+])
+@pytest.mark.parametrize("causal,window", [
+    (True, None), (False, None), (True, 24),
+])
+def test_flash_attention_pallas_matches_ref(b, s, h, kv, d, causal, window):
+    from repro.kernels.flash_attention import flash_attention_pallas
+
+    rng = np.random.default_rng(s * 10 + h)
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, s, kv, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, s, kv, d)).astype(np.float32))
+    ref = kref.attention_ref(q, k, v, causal=causal, window=window)
+    out = flash_attention_pallas(
+        q, k, v, causal=causal, window=window, bq=32, bk=32, interpret=True
+    )
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_flash_attention_pallas_bf16():
+    from repro.kernels.flash_attention import flash_attention_pallas
+
+    rng = np.random.default_rng(3)
+    b, s, h, kv, d = 1, 64, 4, 2, 16
+    q = jnp.asarray(rng.normal(size=(b, s, h, d))).astype(jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(b, s, kv, d))).astype(jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(b, s, kv, d))).astype(jnp.bfloat16)
+    ref = kref.attention_ref(q, k, v)
+    out = flash_attention_pallas(q, k, v, bq=32, bk=32, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out, dtype=np.float32), np.asarray(ref, dtype=np.float32),
+        rtol=3e-2, atol=3e-2,
+    )

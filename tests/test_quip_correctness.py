@@ -1,0 +1,243 @@
+"""QUIP correctness: every strategy must return exactly the offline answer.
+
+The property harness generates ground-truth (complete) tables, masks random
+cells, and gives QUIP an oracle imputer that returns the ground truth — so
+for any query/plan/strategy the answer multiset must equal evaluation over
+the clean tables (paper §3 "lazy but correct").
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from paper_example import EXPECTED, oracle_engine, paper_query, paper_tables
+from repro.core.executor import (
+    evaluate_clean,
+    execute_offline,
+    execute_quip,
+    make_plan,
+)
+from repro.core.plan import Aggregate, Query
+from repro.core.predicates import JoinPredicate, SelectionPredicate
+from repro.core.relation import MaskedRelation
+from repro.core.schema import ColumnSpec, Schema
+from repro.imputers.base import ImputationEngine, Imputer
+
+STRATEGIES = ["lazy", "adaptive", "eager"]
+
+
+# --------------------------------------------------------------------------- #
+# paper's motivating example
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("morsel", [2, 3, 100])
+def test_paper_example_answer(strategy, morsel):
+    tables = paper_tables()
+    q = paper_query()
+    eng = oracle_engine({t: tables[t].copy() for t in tables})
+    res = execute_quip(q, tables, eng, strategy=strategy, morsel_rows=morsel)
+    assert res.answer_tuples() == EXPECTED
+
+
+def test_paper_example_imputation_counts():
+    """Paper §1.2: the preserving strategy answers with 3 imputations; the
+    offline baseline imputes all 9 missing values."""
+    tables = paper_tables()
+    q = paper_query()
+    eng = oracle_engine({t: tables[t].copy() for t in tables})
+    lazy = execute_quip(q, tables, eng, strategy="lazy", morsel_rows=100)
+    assert lazy.counters.imputations == 3
+
+    eng2 = oracle_engine({t: tables[t].copy() for t in tables})
+    off = execute_offline(q, tables, eng2)
+    assert off.counters.imputations == 9
+    assert off.answer_tuples() == EXPECTED
+
+
+@pytest.mark.parametrize("planner", ["imputedb", "naive"])
+def test_paper_example_plan_robustness(planner):
+    """Paper Experiment 5: QUIP is correct on either external plan."""
+    tables = paper_tables()
+    q = paper_query()
+    plan = make_plan(q, tables, planner=planner)
+    eng = oracle_engine({t: tables[t].copy() for t in tables})
+    res = execute_quip(q, tables, eng, plan=plan, strategy="adaptive")
+    assert res.answer_tuples() == EXPECTED
+
+
+# --------------------------------------------------------------------------- #
+# property harness
+# --------------------------------------------------------------------------- #
+class GroundTruthImputer(Imputer):
+    """Returns the pre-masking ground truth (deterministic oracle)."""
+
+    blocking = False
+    cost_per_value = 1e-4
+
+    def __init__(self, truth: dict):
+        self.truth = truth  # attr -> ndarray of true values
+
+    def impute_attr(self, table, attr, tids):
+        return self.truth[attr][np.asarray(tids, dtype=np.int64)]
+
+
+def _build_instance(rng: np.random.Generator, n_tables: int, rows: int,
+                    missing_rate: float, key_card: int):
+    """Chain-join schema R0 ⋈ R1 ⋈ ... with one value column each."""
+    tables, clean, truth = {}, {}, {}
+    for i in range(n_tables):
+        name = f"R{i}"
+        cols = [ColumnSpec(f"{name}.k{i}", "int")]
+        if i + 1 < n_tables:
+            cols.append(ColumnSpec(f"{name}.k{i+1}", "int"))
+        cols.append(ColumnSpec(f"{name}.v", "int"))
+        schema = Schema(name, cols)
+        data, miss = {}, {}
+        n = rows
+        for c in cols:
+            vals = rng.integers(0, key_card, size=n).astype(np.int64)
+            truth[c.name] = vals
+            m = rng.random(n) < missing_rate
+            data[c.name] = np.where(m, 0, vals)
+            miss[c.name] = m
+        tables[name] = MaskedRelation.from_columns(
+            schema, data, missing=miss, base_table=name
+        )
+        clean[name] = MaskedRelation.from_columns(
+            schema, {c.name: truth[c.name] for c in cols}, base_table=name
+        )
+    return tables, clean, truth
+
+
+def _rand_query(rng: np.random.Generator, n_tables: int, key_card: int,
+                with_agg: bool):
+    joins = tuple(
+        JoinPredicate(f"R{i}.k{i+1}", f"R{i+1}.k{i+1}")
+        for i in range(n_tables - 1)
+    )
+    sels = []
+    for i in range(n_tables):
+        if rng.random() < 0.7:
+            op = rng.choice(["<=", ">=", "==", "in"])
+            if op == "in":
+                val = frozenset(
+                    rng.integers(0, key_card, size=3).tolist()
+                )
+            else:
+                val = int(rng.integers(0, key_card))
+            attr = f"R{i}.v" if rng.random() < 0.7 else f"R{i}.k{i}"
+            sels.append(SelectionPredicate(attr, op, val))
+    agg = None
+    projection = tuple(f"R{i}.v" for i in range(n_tables))
+    if with_agg:
+        op = rng.choice(["count", "sum", "avg", "max", "min"])
+        gb = "R0.v" if rng.random() < 0.5 else None
+        agg = Aggregate(op, f"R{n_tables-1}.v", group_by=gb)
+        projection = ()
+    return Query(
+        tables=tuple(f"R{i}" for i in range(n_tables)),
+        selections=tuple(sels),
+        joins=joins,
+        projection=projection,
+        aggregate=agg,
+    )
+
+
+def _answers_match(a, b, float_cols=False):
+    if float_cols:
+        assert len(a) == len(b)
+        for x, y in zip(a, b):
+            assert len(x) == len(y)
+            for u, v in zip(x, y):
+                if u is None or v is None:
+                    assert u == v
+                else:
+                    np.testing.assert_allclose(u, v, rtol=1e-9, atol=1e-9)
+    else:
+        assert a == b
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    n_tables=st.integers(2, 3),
+    rows=st.integers(5, 60),
+    missing_pct=st.integers(0, 60),
+    key_card=st.integers(2, 12),
+    strategy=st.sampled_from(STRATEGIES),
+    with_agg=st.booleans(),
+    morsel=st.sampled_from([7, 64, 4096]),
+)
+def test_quip_equals_offline_property(
+    seed, n_tables, rows, missing_pct, key_card, strategy, with_agg, morsel
+):
+    rng = np.random.default_rng(seed)
+    tables, clean, truth = _build_instance(
+        rng, n_tables, rows, missing_pct / 100.0, key_card
+    )
+    q = _rand_query(rng, n_tables, key_card, with_agg)
+    expected = evaluate_clean(q, clean).to_sorted_tuples()
+
+    eng = ImputationEngine(
+        {t: tables[t].copy() for t in tables},
+        default=lambda: GroundTruthImputer(truth),
+    )
+    res = execute_quip(q, tables, eng, strategy=strategy, morsel_rows=morsel)
+    _answers_match(
+        res.answer_tuples(), expected,
+        float_cols=with_agg and q.aggregate.op == "avg",
+    )
+    # QUIP never imputes more values than exist
+    total_missing = sum(
+        tables[t].is_missing(a).sum()
+        for t in tables for a in tables[t].column_names()
+    )
+    assert res.counters.imputations <= total_missing
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), strategy=st.sampled_from(STRATEGIES))
+def test_minmax_optimization_correct(seed, strategy):
+    """Paper §9.3 Table 7: the MIN/MAX pushdown must not change answers."""
+    rng = np.random.default_rng(seed)
+    tables, clean, truth = _build_instance(rng, 2, 50, 0.3, 8)
+    q = Query(
+        tables=("R0", "R1"),
+        selections=(SelectionPredicate("R0.v", "<=", 6),),
+        joins=(JoinPredicate("R0.k1", "R1.k1"),),
+        projection=(),
+        aggregate=Aggregate("max", "R1.v"),
+    )
+    expected = evaluate_clean(q, clean).to_sorted_tuples()
+    for minmax in (True, False):
+        eng = ImputationEngine(
+            {t: tables[t].copy() for t in tables},
+            default=lambda: GroundTruthImputer(truth),
+        )
+        res = execute_quip(
+            q, tables, eng, strategy=strategy, morsel_rows=16, minmax_opt=minmax
+        )
+        assert res.answer_tuples() == expected
+
+
+def test_lazy_never_more_imputations_than_eager_on_paper():
+    tables = paper_tables()
+    q = paper_query()
+    eng_l = oracle_engine({t: tables[t].copy() for t in tables})
+    eng_e = oracle_engine({t: tables[t].copy() for t in tables})
+    lazy = execute_quip(q, tables, eng_l, strategy="lazy")
+    eager = execute_quip(q, tables, eng_e, strategy="eager")
+    assert lazy.counters.imputations <= eager.counters.imputations
+
+
+def test_quip_with_pallas_bloom_probe():
+    """End-to-end QUIP run using the Pallas bloom-probe kernel (interpret
+    mode) in the semi-join filters / BF_Join path."""
+    tables = paper_tables()
+    q = paper_query()
+    eng = oracle_engine({t: tables[t].copy() for t in tables})
+    res = execute_quip(q, tables, eng, strategy="adaptive",
+                       bloom_impl="pallas")
+    assert res.answer_tuples() == EXPECTED

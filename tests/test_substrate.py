@@ -1,0 +1,224 @@
+"""Distribution-substrate tests: optimizers, checkpoint/restart (incl. torn
+checkpoints + failure injection), gradient compression, straggler monitor,
+elastic resharding, and the QUIP data pipeline."""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import (
+    AsyncCheckpointer,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.optim import (
+    adafactor_init,
+    adafactor_update,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    compress,
+    decompress,
+    ef_compress_grads,
+    init_residual,
+    warmup_cosine,
+)
+from repro.runtime.fault import FaultConfig, FaultTolerantDriver
+from repro.runtime.straggler import StragglerMonitor
+from repro.runtime.elastic import elastic_remesh_plan
+
+
+# --------------------------------------------------------------------------- #
+# optimizers
+# --------------------------------------------------------------------------- #
+def _quad_params():
+    return {"w": jnp.array([3.0, -2.0, 1.5]), "b": jnp.array([0.5])}
+
+
+@pytest.mark.parametrize("opt", ["adamw", "adafactor"])
+def test_optimizers_reduce_quadratic(opt):
+    params = _quad_params()
+    init = adamw_init if opt == "adamw" else adafactor_init
+    update = adamw_update if opt == "adamw" else adafactor_update
+    state = init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(60):
+        grads = jax.grad(loss)(params)
+        kwargs = {"weight_decay": 0.0} if opt == "adamw" else {}
+        params, state = update(params, grads, state, jnp.float32(0.05),
+                               **kwargs)
+    assert float(loss(params)) < 0.25 * l0
+
+
+def test_adafactor_state_is_factored():
+    p = {"w": jnp.zeros((64, 32))}
+    st = adafactor_init(p)
+    leaves = jax.tree_util.tree_leaves(st["stats"])
+    total = sum(l.size for l in leaves)
+    assert total == 64 + 32  # row + col, not 64*32
+
+
+def test_clip_and_schedule():
+    grads = {"a": jnp.full((10,), 100.0)}
+    clipped, norm = clip_by_global_norm(grads, 1.0)
+    assert float(norm) > 1.0
+    total = jnp.sqrt(sum(jnp.sum(l ** 2)
+                         for l in jax.tree_util.tree_leaves(clipped)))
+    np.testing.assert_allclose(float(total), 1.0, rtol=1e-5)
+    lrs = [float(warmup_cosine(jnp.int32(s), 1e-3, 10, 100)) for s in
+           (0, 5, 10, 50, 100)]
+    assert 0 < lrs[0] < lrs[1] < lrs[2]
+    assert lrs[2] >= lrs[3] >= lrs[4] > 0
+
+
+# --------------------------------------------------------------------------- #
+# gradient compression with error feedback
+# --------------------------------------------------------------------------- #
+def test_compression_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1, 1000).astype(np.float32))
+    q, s = compress(x)
+    err = jnp.max(jnp.abs(decompress(q, s) - x))
+    assert float(err) <= float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_unbiased_over_steps():
+    """Sum of EF-compressed grads converges to the true sum (residual
+    carries the quantization error)."""
+    rng = np.random.default_rng(1)
+    true_sum = np.zeros(64, dtype=np.float32)
+    ef_sum = np.zeros(64, dtype=np.float32)
+    grads_like = {"g": jnp.zeros(64)}
+    residual = init_residual(grads_like)
+    for _ in range(200):
+        g = rng.normal(0, 1e-3, 64).astype(np.float32)
+        true_sum += g
+        deq, residual = ef_compress_grads({"g": jnp.asarray(g)}, residual)
+        ef_sum += np.asarray(deq["g"])
+    resid = np.asarray(residual["g"])
+    np.testing.assert_allclose(ef_sum + resid, true_sum, atol=1e-4)
+
+
+# --------------------------------------------------------------------------- #
+# checkpoint / restart
+# --------------------------------------------------------------------------- #
+def test_checkpoint_roundtrip_and_digest(tmp_path):
+    tree = {"a": np.arange(10, dtype=np.float32),
+            "b": {"c": np.ones((3, 4), dtype=np.int32)}}
+    save_checkpoint(str(tmp_path), 7, tree)
+    out, step = restore_checkpoint(str(tmp_path), tree)
+    assert step == 7
+    np.testing.assert_array_equal(out["a"], tree["a"])
+    np.testing.assert_array_equal(out["b"]["c"], tree["b"]["c"])
+
+
+def test_torn_checkpoint_ignored(tmp_path):
+    tree = {"a": np.zeros(4)}
+    save_checkpoint(str(tmp_path), 10, tree)
+    # torn write: step_20 without COMMIT
+    torn = tmp_path / "step_000020"
+    torn.mkdir()
+    (torn / "MANIFEST.json").write_text("{}")
+    assert latest_step(str(tmp_path)) == 10
+
+
+def test_fault_tolerant_driver_replays(tmp_path):
+    """Failure injection mid-run: training completes and matches the
+    uninterrupted run exactly (pure step function + checkpoint/restart)."""
+
+    def train_step(state, batch):
+        new = {"w": state["w"] + batch, "n": state["n"] + 1}
+        return new, {"loss": float(jnp.sum(new["w"]))}
+
+    def batch_fn(step):
+        return jnp.float32(step + 1)
+
+    init = {"w": jnp.zeros(()), "n": jnp.zeros((), jnp.int32)}
+    # uninterrupted reference
+    ref = init
+    for s in range(20):
+        ref, _ = train_step(ref, batch_fn(s))
+
+    cfg = FaultConfig(ckpt_dir=str(tmp_path), ckpt_every=5,
+                      fail_at_steps=(7, 13))
+    driver = FaultTolerantDriver(cfg)
+    out = driver.run(train_step, init, batch_fn, 20, state_like=init)
+    assert driver.restarts == 2
+    np.testing.assert_allclose(float(out["w"]), float(ref["w"]))
+    assert int(out["n"]) == 20
+
+
+def test_async_checkpointer(tmp_path):
+    ck = AsyncCheckpointer(str(tmp_path), keep=2)
+    for s in (5, 10, 15):
+        ck.save(s, {"x": np.full(3, s)})
+    ck.wait()
+    assert latest_step(str(tmp_path)) == 15
+    steps = sorted(
+        int(n.split("_")[1]) for n in os.listdir(tmp_path)
+        if n.startswith("step_")
+    )
+    assert steps == [10, 15]  # gc kept last 2
+
+
+# --------------------------------------------------------------------------- #
+# straggler + elastic
+# --------------------------------------------------------------------------- #
+def test_straggler_detection():
+    mon = StragglerMonitor(n_ranks=8, threshold=1.5, patience=2)
+    rng = np.random.default_rng(0)
+    fired_total = []
+    for step in range(10):
+        times = rng.normal(1.0, 0.02, 8)
+        times[3] = 2.5  # persistent straggler
+        fired_total += mon.observe(step, times)
+    assert 3 in fired_total
+    assert all(r == 3 for r in fired_total)
+
+
+def test_elastic_remesh_plan():
+    dp, mp = elastic_remesh_plan(512, 256, model_parallel=16)
+    assert (dp, mp) == (16, 16)
+    with pytest.raises(AssertionError):
+        elastic_remesh_plan(512, 100, model_parallel=16)
+
+
+def test_elastic_reshard_roundtrip():
+    from repro.runtime.elastic import reshard_state
+
+    state = {"wq": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    out = reshard_state(state, mesh)
+    np.testing.assert_array_equal(np.asarray(out["wq"]),
+                                  np.asarray(state["wq"]))
+
+
+# --------------------------------------------------------------------------- #
+# QUIP data pipeline (paper-technique → trainer integration)
+# --------------------------------------------------------------------------- #
+def test_quip_pipeline_produces_batches():
+    from repro.data.pipeline import QuipCleanStage
+    from repro.data.queries import workload
+    from repro.data.synthetic import wifi_dataset
+
+    tables, _ = wifi_dataset(n_users=60, n_wifi=500, n_occ=300)
+    queries = workload("wifi", tables, kind="random", n_queries=3, seed=5)
+    stage = QuipCleanStage(
+        tables=tables, queries=queries, vocab=256, seq_len=16,
+        global_batch=4,
+    )
+    it = stage.batches()
+    batch = next(it)
+    assert batch["tokens"].shape == (4, 16)
+    assert batch["labels"].shape == (4, 16)
+    assert batch["tokens"].min() >= 0 and batch["tokens"].max() < 256
