@@ -1,7 +1,13 @@
-"""Kernel microbenchmarks: bloom probe + masked-KNN distance — wall time of
-the jitted ref path on CPU and allclose vs oracle for the Pallas kernels in
-interpret mode (the perf numbers that matter are the dry-run rooflines; this
-is the correctness+overhead record)."""
+"""Kernel microbenchmarks: bloom probe + masked-KNN distance + hash join —
+wall time of the jitted ref path on CPU and allclose vs oracle for the Pallas
+kernels in interpret mode (the perf numbers that matter are the dry-run
+rooflines; this is the correctness+overhead record).
+
+The hash-join cases track the QUIP join spine's kernel trajectory: build and
+probe sides at 10^4–10^7 keys across duplication factors and missing-key
+rates, NumPy sort-join (oracle) vs the jnp ref path, with the Pallas pair
+verified at the smallest size (sequential interpret-mode build is a
+correctness tool, not a perf path)."""
 
 from __future__ import annotations
 
@@ -11,6 +17,7 @@ from typing import Dict, List
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.triggers import multi_match
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 from repro.kernels.hashing import fold64, hash_positions_np
@@ -75,11 +82,66 @@ def run(fast: bool = True) -> List[Dict]:
             (np.isinf(ref_d) == np.isinf(pl_d)).all()
         ),
     })
+
+    # hash join (the ⋈̂ / BF_Join core)
+    sizes = [10**4, 10**5] if fast else [10**4, 10**5, 10**6, 10**7]
+    for n in sizes:
+        for dup in (1, 8):
+            for miss_rate in (0.0, 0.5):
+                build = np.repeat(
+                    rng.integers(0, 1 << 40, max(n // dup, 1)), dup
+                ).astype(np.int64)
+                n_hit = int(len(build) * (1.0 - miss_rate))
+                probe = np.concatenate([
+                    rng.choice(build, n_hit),
+                    rng.integers(1 << 41, 1 << 42, len(build) - n_hit),
+                ]).astype(np.int64)
+                rng.shuffle(probe)
+                # impl pinned so a stray QUIP_JOIN_IMPL can't redirect the
+                # oracle side of the comparison through the kernel path
+                us_np = _time(lambda: multi_match(build, probe, impl="numpy"))
+                us_ref_join = _time(
+                    lambda: kops.hash_join_match(build, probe, impl="ref")
+                )
+                p0, b0 = multi_match(build, probe, impl="numpy")
+                p1, b1 = kops.hash_join_match(build, probe, impl="ref")
+                row = {
+                    "kernel": "hash_join", "n_build": len(build),
+                    "n_probe": len(probe), "dup": dup,
+                    "miss_rate": miss_rate, "pairs": len(p0),
+                    "us_per_call_numpy": round(us_np, 1),
+                    "us_per_call_ref": round(us_ref_join, 1),
+                    "ref_matches_numpy": bool(
+                        np.array_equal(p0, p1) and np.array_equal(b0, b1)
+                    ),
+                }
+                if n == sizes[0]:
+                    p2, b2 = kops.hash_join_match(
+                        build, probe, impl="pallas"
+                    )
+                    row["pallas_matches_numpy"] = bool(
+                        np.array_equal(p0, p2) and np.array_equal(b0, b2)
+                    )
+                rows.append(row)
     return rows
 
 
 def derived(rows: List[Dict]) -> Dict[str, float]:
+    join_rows = [r for r in rows if r["kernel"] == "hash_join"]
+    biggest = max(join_rows, key=lambda r: (r["n_build"], r["dup"]))
     return {
         "bloom_pallas_ok": float(rows[0]["pallas_matches_ref"]),
         "knn_pallas_err": rows[1]["pallas_max_abs_err"],
+        "join_ref_ok": float(
+            all(r["ref_matches_numpy"] for r in join_rows)
+        ),
+        "join_pallas_ok": float(
+            all(
+                r["pallas_matches_numpy"]
+                for r in join_rows
+                if "pallas_matches_numpy" in r
+            )
+        ),
+        "join_ref_us_max": biggest["us_per_call_ref"],
+        "join_numpy_us_max": biggest["us_per_call_numpy"],
     }

@@ -53,7 +53,7 @@ from repro.core.predicates import JoinPredicate, SelectionPredicate
 from repro.core.relation import MaskedRelation, concat_relations
 from repro.core.schema import ColumnSpec, Schema, table_of
 from repro.core.stats import ExecutionCounters, RuntimeStats
-from repro.core.triggers import JoinState, multi_match
+from repro.core.triggers import JoinState, multi_match, resolve_join_impl
 from repro.core.vflist import rewrite_for_quip
 
 __all__ = [
@@ -114,6 +114,7 @@ class QuipExecutor:
         strategy: str = "adaptive",
         morsel_rows: int = 8192,
         bloom_impl: Optional[str] = None,
+        join_impl: Optional[str] = None,
         minmax_opt: bool = True,
         use_vf: bool = True,
     ):
@@ -128,11 +129,13 @@ class QuipExecutor:
         self.use_vf = use_vf
         self.morsel_rows = int(morsel_rows)
         self.bloom_impl = bloom_impl
+        self.join_impl = resolve_join_impl(join_impl)
         self.minmax_opt = minmax_opt
 
         self.engine = engine
         self.stats: RuntimeStats = engine.stats
         self.counters: ExecutionCounters = engine.counters
+        self.counters.join_impl = self.join_impl
 
         ta = _table_attrs(tables)
         self.root = rewrite_for_quip(plan, query, ta)
@@ -163,6 +166,7 @@ class QuipExecutor:
             self.join_states[n.node_id] = JoinState(
                 n.node_id, l_attr, r_attr,
                 self.blooms[l_attr], self.blooms[r_attr],
+                join_impl=self.join_impl,
             )
             self.join_side_tables[n.node_id] = (l_tabs, r_tabs)
 
@@ -435,7 +439,7 @@ class QuipExecutor:
             probe_keys = np.where(
                 p_present, morsel.values(l_attr), np.int64(-(2 ** 61))
             ).astype(np.int64)
-            p_idx, b_idx = multi_match(b_keys, probe_keys)
+            p_idx, b_idx = multi_match(b_keys, probe_keys, impl=self.join_impl)
             dt = time.perf_counter() - t0
             self.counters.join_tests += int(p_present.sum())
             self.stats.record_join(
@@ -841,6 +845,7 @@ def execute_quip(
     planner: str = "imputedb",
     morsel_rows: int = 8192,
     bloom_impl: Optional[str] = None,
+    join_impl: Optional[str] = None,
     minmax_opt: bool = True,
     use_vf: bool = True,
 ) -> ExecutionResult:
@@ -854,6 +859,7 @@ def execute_quip(
         strategy=strategy,
         morsel_rows=morsel_rows,
         bloom_impl=bloom_impl,
+        join_impl=join_impl,
         minmax_opt=minmax_opt,
         use_vf=use_vf,
     )

@@ -105,6 +105,7 @@ class ExecutionCounters:
     minmax_removed: int = 0  # |RT| in Table 7
     trigger_joins: int = 0
     wall_seconds: float = 0.0
+    join_impl: str = "numpy"  # resolved join-core dispatch (see triggers)
 
     def as_dict(self) -> Dict[str, float]:
         return dataclasses.asdict(self)

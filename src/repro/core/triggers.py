@@ -14,6 +14,7 @@ on verify failure) so that late resolutions observe them — this is what makes
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -21,14 +22,39 @@ import numpy as np
 from repro.core.bloom import BloomFilter
 from repro.core.relation import MaskedRelation, concat_relations
 from repro.core.schema import table_of
+from repro.kernels import ops as kops
 
-__all__ = ["JoinState", "multi_match"]
+__all__ = ["JoinState", "multi_match", "resolve_join_impl"]
 
 
-def multi_match(build_keys: np.ndarray, probe_keys: np.ndarray
+def resolve_join_impl(impl: Optional[str] = None) -> str:
+    """Join-core dispatch: explicit ``impl`` > ``QUIP_JOIN_IMPL`` env >
+    ``"numpy"`` (the sort-join oracle).  ``"ref"`` / ``"pallas"`` route
+    through the kernel layer (``kernels.ops.hash_join_match``)."""
+    impl = impl or os.environ.get("QUIP_JOIN_IMPL") or "numpy"
+    if impl not in ("numpy", "ref", "pallas"):
+        raise ValueError(f"unknown join impl {impl!r}")
+    return impl
+
+
+def multi_match(build_keys: np.ndarray, probe_keys: np.ndarray,
+                impl: Optional[str] = None
                 ) -> Tuple[np.ndarray, np.ndarray]:
     """All (probe_idx, build_idx) pairs with equal keys — vectorized hash-join
-    core (sort + searchsorted + ragged range expansion)."""
+    core (sort + searchsorted + ragged range expansion).
+
+    ``impl`` (or the ``QUIP_JOIN_IMPL`` env var) routes the match through the
+    kernel-backed hash join instead; the NumPy path below stays the semantics
+    oracle.  Non-integer key dtypes always take the NumPy path (the kernels
+    hash folded 64-bit integers).
+    """
+    impl = resolve_join_impl(impl)
+    if (
+        impl != "numpy"
+        and np.issubdtype(np.asarray(build_keys).dtype, np.integer)
+        and np.issubdtype(np.asarray(probe_keys).dtype, np.integer)
+    ):
+        return kops.hash_join_match(build_keys, probe_keys, impl=impl)
     if len(build_keys) == 0 or len(probe_keys) == 0:
         z = np.zeros(0, dtype=np.int64)
         return z, z
@@ -68,8 +94,10 @@ class JoinState:
     """Runtime state of one modified join operator."""
 
     def __init__(self, node_id: int, left_attr: str, right_attr: str,
-                 bloom_left: BloomFilter, bloom_right: BloomFilter):
+                 bloom_left: BloomFilter, bloom_right: BloomFilter,
+                 join_impl: Optional[str] = None):
         self.node_id = node_id
+        self.join_impl = join_impl  # resolved per call (env may change)
         self.sides: Dict[str, _Side] = {
             "L": _Side(left_attr),
             "R": _Side(right_attr),
@@ -143,7 +171,9 @@ class JoinState:
         if snap_tids is None:
             return
         # match snapshot rows carrying these base tids
-        p_idx, s_idx = multi_match(snap_tids, np.asarray(tids, dtype=np.int64))
+        p_idx, s_idx = multi_match(
+            snap_tids, np.asarray(tids, dtype=np.int64), impl=self.join_impl
+        )
         if len(s_idx) == 0:
             return
         vals = np.asarray(values)[p_idx]
@@ -196,7 +226,8 @@ class JoinState:
         cand_rows = rows[hit]
         cand_keys = keys[hit]
         p_idx, b_idx = multi_match(
-            np.where(opresent, okeys, np.int64(-(2**62))), cand_keys
+            np.where(opresent, okeys, np.int64(-(2**62))), cand_keys,
+            impl=self.join_impl,
         )
         if counters is not None:
             counters.trigger_joins += len(cand_rows)

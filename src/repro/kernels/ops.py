@@ -13,14 +13,28 @@ from __future__ import annotations
 
 from typing import Optional, Tuple
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 from repro.kernels.bloom_probe import bloom_probe_pallas
+from repro.kernels.hash_join import (
+    hash_join_build_pallas,
+    hash_join_probe_pallas,
+    table_log2cap,
+)
+from repro.kernels.hashing import fold64
 from repro.kernels.knn_distance import masked_distance_pallas
 
-__all__ = ["bloom_probe", "masked_distance", "masked_knn", "default_impl"]
+__all__ = [
+    "bloom_probe",
+    "hash_join_match",
+    "masked_distance",
+    "masked_knn",
+    "default_impl",
+]
 
 
 def default_impl() -> str:
@@ -49,6 +63,86 @@ def bloom_probe(
 
 
 _probe_ref_jit = jax.jit(_ref.bloom_probe_ref, static_argnums=(2, 3))
+
+
+_hash_join_probe_sorted_jit = jax.jit(
+    _ref.hash_join_probe_sorted_ref, static_argnums=(3,)
+)
+
+
+def hash_join_match(
+    build_keys,
+    probe_keys,
+    *,
+    impl: Optional[str] = None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """All (probe_idx, build_idx) pairs with equal int64 keys.
+
+    The kernel-backed twin of ``core.triggers.multi_match`` (the NumPy
+    oracle): pairs come back as host int64 arrays ordered by probe index,
+    ascending build index within a probe — bit-identical to the oracle.
+
+    Keys are folded to uint32 for the device (``hashing.fold64``); the
+    kernels emit fold-level *candidates* (counts + fixed-size match blocks)
+    which are verified here against the original 64-bit keys, so fold
+    collisions never produce wrong pairs.
+    """
+    impl = impl or default_impl()
+    b = np.ascontiguousarray(np.asarray(build_keys, dtype=np.int64))
+    p = np.ascontiguousarray(np.asarray(probe_keys, dtype=np.int64))
+    if len(b) == 0 or len(p) == 0:
+        z = np.zeros(0, dtype=np.int64)
+        return z, z
+    fb = fold64(b)
+    fp = fold64(p)
+    # static fold-level duplication bound (columns of the match block)
+    max_dup = int(np.unique(fb, return_counts=True)[1].max())
+    # bound the dense (chunk × max_dup) match block; chunking the probe side
+    # keeps memory flat on skewed builds while preserving probe-major order
+    chunk = max(256, _DENSE_BUDGET // max_dup)
+    # build once (table / sorted order), probe per chunk
+    if impl == "pallas":
+        log2cap = table_log2cap(len(b))
+        slot_key, slot_idx = hash_join_build_pallas(
+            jnp.asarray(fb), log2cap=log2cap, interpret=_interpret()
+        )
+    else:
+        order = np.argsort(fb, kind="stable").astype(np.int32)
+        sorted_keys = jnp.asarray(fb[order])
+        order = jnp.asarray(order)
+    probe_parts, build_parts = [], []
+    for lo in range(0, len(p), chunk):
+        fpc = fp[lo:lo + chunk]
+        if impl == "pallas":
+            counts, matches = hash_join_probe_pallas(
+                slot_key,
+                slot_idx,
+                jnp.asarray(fpc),
+                log2cap=log2cap,
+                max_dup=max_dup,
+                interpret=_interpret(),
+            )
+        else:
+            counts, matches = _hash_join_probe_sorted_jit(
+                sorted_keys, order, jnp.asarray(fpc), max_dup
+            )
+        counts = np.asarray(counts, dtype=np.int64)
+        matches = np.asarray(matches)
+        # ragged expansion: row-major valid entries are already in oracle order
+        probe_parts.append(
+            np.repeat(np.arange(len(fpc), dtype=np.int64), counts) + lo
+        )
+        build_parts.append(matches[matches >= 0].astype(np.int64))
+    probe_idx = np.concatenate(probe_parts)
+    build_idx = np.concatenate(build_parts)
+    # exact 64-bit verification kills fold-collision candidates
+    keep = b[build_idx] == p[probe_idx]
+    if not keep.all():
+        probe_idx, build_idx = probe_idx[keep], build_idx[keep]
+    return probe_idx, build_idx
+
+
+_DENSE_BUDGET = 1 << 24  # match-block entries per probe chunk (64 MiB int32)
 
 
 def masked_distance(

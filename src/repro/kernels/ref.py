@@ -12,7 +12,52 @@ import numpy as np
 
 from repro.kernels.hashing import MULTIPLIERS, OFFSETS
 
-__all__ = ["bloom_probe_ref", "masked_distance_ref", "masked_knn_ref"]
+__all__ = [
+    "bloom_probe_ref",
+    "hash_join_probe_sorted_ref",
+    "hash_join_ref",
+    "masked_distance_ref",
+    "masked_knn_ref",
+]
+
+
+def hash_join_probe_sorted_ref(
+    sorted_keys: jnp.ndarray, order: jnp.ndarray, probe_folded: jnp.ndarray,
+    max_dup: int,
+):
+    """Probe half of the sort-based join: build side pre-sorted once
+    (``sorted_keys = build[order]``, stable) so chunked probes don't repeat
+    the O(nb·log nb) sort.  Returns ``(counts (np,) int32,
+    matches (np, max_dup) int32)``: row i holds the build rows whose folded
+    key equals probe i's, ascending, ``-1``-padded."""
+    nb = sorted_keys.shape[0]
+    lo = jnp.searchsorted(sorted_keys, probe_folded, side="left")
+    hi = jnp.searchsorted(sorted_keys, probe_folded, side="right")
+    counts = (hi - lo).astype(jnp.int32)
+    j = jnp.arange(max_dup, dtype=jnp.int32)
+    idx = lo.astype(jnp.int32)[:, None] + j[None, :]
+    valid = j[None, :] < counts[:, None]
+    gathered = jnp.take(
+        order, jnp.clip(idx, 0, max(nb - 1, 0)), axis=0
+    ).astype(jnp.int32)
+    return counts, jnp.where(valid, gathered, -1)
+
+
+def hash_join_ref(
+    build_folded: jnp.ndarray, probe_folded: jnp.ndarray, max_dup: int
+):
+    """Fold-level hash-join candidates, sort-based (the jnp oracle for the
+    open-addressing Pallas pair in ``hash_join.py``).
+
+    build_folded: (nb,) uint32; probe_folded: (np,) uint32; ``max_dup`` is a
+    static bound on the fold-level duplication of the build side.  Fold
+    collisions are resolved by the host wrapper (``ops.hash_join_match``)
+    against the original 64-bit keys.
+    """
+    order = jnp.argsort(build_folded, stable=True).astype(jnp.int32)
+    return hash_join_probe_sorted_ref(
+        build_folded[order], order, probe_folded, max_dup
+    )
 
 def bloom_probe_ref(
     bits: jnp.ndarray, folded: jnp.ndarray, num_hashes: int, log2m: int

@@ -1,0 +1,130 @@
+"""Optional-``hypothesis`` shim for the test suite.
+
+The property tests in this repo are written against the hypothesis API
+(``@given`` + ``strategies``).  The package is a dev-only dependency
+(``requirements-dev.txt``) and is deliberately *not* required to run tier-1:
+when it is missing, this module provides a deterministic fallback that draws
+a small fixed-seed example corpus from equivalent strategy objects and runs
+the test body once per example.  Shrinking/replay niceties are lost, but the
+suite collects and the invariants still get exercised.
+
+Usage (in test modules)::
+
+    from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import itertools
+
+import numpy as np
+
+try:  # pragma: no cover - trivial re-export when hypothesis is installed
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    _FALLBACK_SEED = 0xC0FFEE
+    _FALLBACK_EXAMPLES = 10  # per test; settings(max_examples=n) lowers this
+
+    class _Strategy:
+        """A draw-only stand-in for a hypothesis strategy."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng: np.random.Generator):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1))
+            )
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def sampled_from(options):
+            seq = list(options)
+            return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value))
+            )
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elements.draw(rng) for _ in range(n)]
+
+            return _Strategy(draw)
+
+    st = _Strategies()
+
+    def given(**strategies):
+        """Run the test once per example of a fixed-seed corpus."""
+
+        def decorate(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_compat_max_examples",
+                            _FALLBACK_EXAMPLES)
+                rng = np.random.default_rng(_FALLBACK_SEED)
+                for i in itertools.count():
+                    if i >= n:
+                        break
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    try:
+                        fn(*args, **kwargs, **drawn)
+                    except Exception as e:  # noqa: BLE001 - re-raise w/ context
+                        raise AssertionError(
+                            f"falsifying example (compat corpus #{i}): {drawn}"
+                        ) from e
+
+            wrapper._compat_max_examples = _FALLBACK_EXAMPLES
+            # Hide the drawn parameters from pytest's fixture resolution:
+            # only non-strategy parameters (real fixtures) stay visible.
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(
+                parameters=[
+                    p for name, p in sig.parameters.items()
+                    if name not in strategies
+                ]
+            )
+            if hasattr(wrapper, "__wrapped__"):
+                del wrapper.__wrapped__
+            return wrapper
+
+        return decorate
+
+    def settings(max_examples=None, deadline=None, **_ignored):
+        """Subset of hypothesis.settings: only max_examples matters here."""
+
+        def decorate(fn):
+            if max_examples is not None and hasattr(
+                fn, "_compat_max_examples"
+            ):
+                fn._compat_max_examples = min(
+                    fn._compat_max_examples, int(max_examples)
+                )
+            return fn
+
+        return decorate
+
+
+# Alias so either import style works.
+strategies = st
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st", "strategies"]

@@ -1,6 +1,38 @@
-"""Make sibling test fixtures importable regardless of invocation dir."""
+"""Shared test config: sibling-fixture imports + the ``slow`` marker gate.
+
+Tier-1 (`PYTHONPATH=src python -m pytest -q`) runs the fast suite; cases
+marked ``@pytest.mark.slow`` (full per-architecture sweeps, long-prefix
+decode equivalence, long optimizer convergence) are skipped unless
+``--runslow`` is passed.
+"""
 
 import os
 import sys
 
+import pytest
+
 sys.path.insert(0, os.path.dirname(__file__))
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--runslow",
+        action="store_true",
+        default=False,
+        help="also run tests marked @pytest.mark.slow",
+    )
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: expensive case, skipped unless --runslow is given"
+    )
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    skip_slow = pytest.mark.skip(reason="slow: pass --runslow to run")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)

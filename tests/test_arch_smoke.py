@@ -24,6 +24,20 @@ from repro.models import (
 
 ARCHS = all_archs()
 
+# Compiling every architecture's train/decode graph takes minutes on CPU, so
+# the default (tier-1) suite runs one representative decoder + the encoder
+# path; the full sweep runs with --runslow (see conftest.py).
+FAST_TRAIN_ARCHS = frozenset({"qwen2.5-3b", "hubert-xlarge"})
+FAST_DECODE_ARCHS = frozenset({"qwen2.5-3b"})
+FAST_PREFILL_ARCHS = frozenset({"qwen2.5-3b", "mamba2-370m"})
+
+
+def _arch_params(archs, fast):
+    return [
+        pytest.param(a, marks=() if a in fast else pytest.mark.slow)
+        for a in archs
+    ]
+
 
 def _batch(cfg, key, b=2, s=32):
     if uses_embeds(cfg):
@@ -38,7 +52,7 @@ def _batch(cfg, key, b=2, s=32):
     }
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", _arch_params(ARCHS, FAST_TRAIN_ARCHS))
 def test_train_step_reduced(arch):
     cfg = get_arch(arch).reduced()
     key = jax.random.PRNGKey(0)
@@ -58,7 +72,7 @@ def test_train_step_reduced(arch):
     assert max(jax.tree_util.tree_leaves(moved)) > 0
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", _arch_params(ARCHS, FAST_DECODE_ARCHS))
 def test_decode_step_reduced(arch):
     cfg = get_arch(arch).reduced()
     if cfg.encoder_only:
@@ -76,8 +90,13 @@ def test_decode_step_reduced(arch):
     assert bool(jnp.all(jnp.isfinite(logits)))
 
 
-@pytest.mark.parametrize("arch", ["qwen2.5-3b", "gemma2-27b", "qwen3-8b",
-                                  "deepseek-v3-671b"])
+@pytest.mark.parametrize(
+    "arch",
+    _arch_params(
+        ["qwen2.5-3b", "gemma2-27b", "qwen3-8b", "deepseek-v3-671b"],
+        FAST_DECODE_ARCHS,
+    ),
+)
 def test_chunked_attention_matches_naive(arch):
     cfg_c = dataclasses.replace(
         get_arch(arch).reduced(), attn_q_chunk=16, attn_k_chunk=16
@@ -91,16 +110,25 @@ def test_chunked_attention_matches_naive(arch):
     np.testing.assert_allclose(ln, lc, rtol=1e-4, atol=1e-5)
 
 
-@pytest.mark.parametrize("arch", ["qwen2.5-3b", "mamba2-370m", "zamba2-1.2b",
-                                  "gemma2-27b"])
-def test_decode_matches_prefill(arch):
+@pytest.mark.parametrize(
+    "prefix",
+    [12, pytest.param(32, marks=pytest.mark.slow)],  # eager decode ∝ S
+)
+@pytest.mark.parametrize(
+    "arch",
+    _arch_params(
+        ["qwen2.5-3b", "mamba2-370m", "zamba2-1.2b", "gemma2-27b"],
+        FAST_PREFILL_ARCHS,
+    ),
+)
+def test_decode_matches_prefill(arch, prefix):
     """Greedy next-token from decode(cache of prefix) equals next-token from
     prefill(prefix) — KV/SSM cache consistency."""
     cfg = get_arch(arch).reduced()
     cfg = dataclasses.replace(cfg, dtype="float32")
     key = jax.random.PRNGKey(2)
     params = init_params(cfg, key)
-    B, S = 1, 32
+    B, S = 1, prefix
     toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
 
     logits_pre = prefill(params, cfg, {"tokens": toks}, remat="none")

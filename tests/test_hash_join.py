@@ -1,0 +1,145 @@
+"""Hash-join kernel subsystem: ``ops.hash_join_match`` (ref and
+pallas-interpret) vs a naive O(n·m) nested-loop oracle and vs the NumPy
+sort-join (``core.triggers.multi_match``), on adversarial inputs — empty
+sides, all-duplicate keys, uint32 fold collisions, keys absent from the
+build side — plus a fixed-corpus property sweep."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core.triggers import multi_match, resolve_join_impl
+from repro.kernels import ops as kops
+from repro.kernels.hashing import fold64
+
+IMPLS = ["ref", "pallas"]
+
+
+def nested_loop_oracle(build, probe):
+    """O(n·m) ground truth, ordered (probe asc, build asc)."""
+    pairs = [
+        (i, j)
+        for i, pk in enumerate(probe)
+        for j, bk in enumerate(build)
+        if bk == pk
+    ]
+    if not pairs:
+        z = np.zeros(0, dtype=np.int64)
+        return z, z
+    arr = np.asarray(pairs, dtype=np.int64)
+    return arr[:, 0], arr[:, 1]
+
+
+def _assert_matches_oracle(build, probe):
+    build = np.asarray(build, dtype=np.int64)
+    probe = np.asarray(probe, dtype=np.int64)
+    want_p, want_b = nested_loop_oracle(build, probe)
+    got_np_p, got_np_b = multi_match(build, probe)
+    np.testing.assert_array_equal(got_np_p, want_p)
+    np.testing.assert_array_equal(got_np_b, want_b)
+    for impl in IMPLS:
+        got_p, got_b = kops.hash_join_match(build, probe, impl=impl)
+        np.testing.assert_array_equal(got_p, want_p, err_msg=impl)
+        np.testing.assert_array_equal(got_b, want_b, err_msg=impl)
+
+
+def _fold_colliding_pair(lo: int):
+    """Two distinct int64 keys with equal fold64: fold = lo ^ (hi·PHI)."""
+    phi = 0x9E3779B9
+    k1 = lo & 0xFFFFFFFF
+    k2 = (1 << 32) | ((k1 ^ phi) & 0xFFFFFFFF)
+    assert fold64([k1])[0] == fold64([k2])[0] and k1 != k2
+    return k1, k2
+
+
+# --------------------------------------------------------------------------- #
+# adversarial fixed cases
+# --------------------------------------------------------------------------- #
+def test_empty_sides():
+    _assert_matches_oracle([], [])
+    _assert_matches_oracle([], [1, 2, 3])
+    _assert_matches_oracle([1, 2, 3], [])
+
+
+def test_singleton_and_absent_keys():
+    _assert_matches_oracle([5], [5])
+    _assert_matches_oracle([5], [6])
+    _assert_matches_oracle([1, 2, 3], [4, 5, 6, 7])  # all probes miss
+
+
+def test_all_duplicate_build_keys():
+    _assert_matches_oracle([7] * 40, [7, 8, 7, 7])
+
+
+def test_all_duplicate_both_sides():
+    _assert_matches_oracle([3] * 25, [3] * 17)
+
+
+def test_negative_and_extreme_keys():
+    _assert_matches_oracle(
+        [-(2**62), -1, 0, 1, 2**62, -(2**62)],
+        [0, -(2**62), 2**62, -5, -1],
+    )
+
+
+def test_uint32_fold_collisions():
+    """Distinct 64-bit keys that fold to the same uint32 must not join."""
+    k1, k2 = _fold_colliding_pair(12345)
+    k3, k4 = _fold_colliding_pair(987654321)
+    build = [k1, k2, k3, k1, k4]
+    probe = [k1, k2, k3, k4, 999, k2]
+    _assert_matches_oracle(build, probe)
+
+
+def test_probe_chunking_preserves_order(monkeypatch):
+    """Shrinking the dense budget forces the chunked probe path."""
+    monkeypatch.setattr(kops, "_DENSE_BUDGET", 512)
+    rng = np.random.default_rng(7)
+    build = rng.integers(0, 40, 700)
+    probe = rng.integers(0, 40, 900)
+    _assert_matches_oracle(build, probe)
+
+
+def test_resolve_join_impl(monkeypatch):
+    assert resolve_join_impl(None) == "numpy"
+    assert resolve_join_impl("pallas") == "pallas"
+    monkeypatch.setenv("QUIP_JOIN_IMPL", "ref")
+    assert resolve_join_impl(None) == "ref"
+    assert resolve_join_impl("numpy") == "numpy"  # explicit beats env
+    with pytest.raises(ValueError):
+        resolve_join_impl("cuda")
+
+
+# --------------------------------------------------------------------------- #
+# property sweep
+# --------------------------------------------------------------------------- #
+# sizes from a small fixed set so the per-shape jit compiles amortize across
+# examples while still covering the empty / tiny / non-aligned / large edges
+_SIZES = [0, 1, 17, 64, 120]
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    n_build=st.sampled_from(_SIZES),
+    n_probe=st.sampled_from(_SIZES),
+    key_card=st.integers(1, 25),
+)
+def test_hash_join_matches_nested_loop_property(
+    seed, n_build, n_probe, key_card
+):
+    rng = np.random.default_rng(seed)
+    build = rng.integers(-key_card, key_card, n_build)
+    probe = rng.integers(-key_card, key_card, n_probe)
+    _assert_matches_oracle(build, probe)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.sampled_from([1, 50, 300]))
+def test_hash_join_sparse_wide_keys_property(seed, n):
+    rng = np.random.default_rng(seed)
+    build = rng.integers(-(2**62), 2**62, n)
+    probe = np.concatenate([build[:: 3], rng.integers(-(2**62), 2**62, n)])
+    _assert_matches_oracle(build, probe)

@@ -7,7 +7,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.bloom import BloomFilter
 from repro.kernels import ops as kops
@@ -108,6 +108,55 @@ def test_hash_positions_consistent_numpy_vs_jnp():
                      np.uint32(1) << (pos_np.ravel() & 31))
     hit = kref.bloom_probe_ref(jnp.asarray(arr), folded, 4, 20)
     assert np.asarray(hit).all()
+
+
+# --------------------------------------------------------------------------- #
+# hash-join build/probe kernel pair
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("n,card", [(1, 1), (37, 5), (300, 40), (1000, 10**9)])
+def test_hash_join_build_table_invariants(n, card):
+    from repro.kernels.hash_join import hash_join_build_pallas, table_log2cap
+
+    rng = np.random.default_rng(n)
+    keys = rng.integers(-card, card, n).astype(np.int64)
+    folded = fold64(keys)
+    log2cap = table_log2cap(n)
+    slot_key, slot_idx = hash_join_build_pallas(
+        jnp.asarray(folded), log2cap=log2cap, interpret=True
+    )
+    slot_key, slot_idx = np.asarray(slot_key), np.asarray(slot_idx)
+    occupied = slot_idx >= 0
+    # every build row in exactly one slot, carrying its own folded key
+    assert int(occupied.sum()) == n
+    assert sorted(slot_idx[occupied].tolist()) == list(range(n))
+    np.testing.assert_array_equal(slot_key[occupied], folded[slot_idx[occupied]])
+
+
+@pytest.mark.parametrize("nb,np_,card", [(64, 256, 7), (500, 100, 3), (200, 200, 10**9)])
+def test_hash_join_probe_pallas_matches_ref(nb, np_, card):
+    from repro.kernels.hash_join import (
+        hash_join_build_pallas,
+        hash_join_probe_pallas,
+        table_log2cap,
+    )
+
+    rng = np.random.default_rng(nb * 1000 + np_)
+    build = fold64(rng.integers(-card, card, nb).astype(np.int64))
+    probe = fold64(rng.integers(-card, card, np_).astype(np.int64))
+    max_dup = int(np.unique(build, return_counts=True)[1].max())
+    c_ref, m_ref = kref.hash_join_ref(
+        jnp.asarray(build), jnp.asarray(probe), max_dup
+    )
+    log2cap = table_log2cap(nb)
+    slot_key, slot_idx = hash_join_build_pallas(
+        jnp.asarray(build), log2cap=log2cap, interpret=True
+    )
+    c_pl, m_pl = hash_join_probe_pallas(
+        slot_key, slot_idx, jnp.asarray(probe),
+        log2cap=log2cap, max_dup=max_dup, interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(c_ref), np.asarray(c_pl))
+    np.testing.assert_array_equal(np.asarray(m_ref), np.asarray(m_pl))
 
 
 # --------------------------------------------------------------------------- #

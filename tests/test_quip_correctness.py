@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from paper_example import EXPECTED, oracle_engine, paper_query, paper_tables
 from repro.core.executor import (
