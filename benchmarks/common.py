@@ -39,6 +39,7 @@ IMPUTER_FACTORIES: Dict[str, Callable[[], object]] = {
 class StrategyResult:
     strategy: str
     imputations: int
+    impute_batches: int  # imputer invocations (batched-service flush batches)
     wall_seconds: float
     temp_tuples: int
     filtered_by_bloom: int
@@ -64,7 +65,7 @@ def run_workload(
 ) -> Dict[str, StrategyResult]:
     out: Dict[str, StrategyResult] = {}
     for strat in strategies:
-        imps = wall = temps = bloom = trig = 0
+        imps = batches = wall = temps = bloom = trig = 0
         answers: List[tuple] = []
         for q in queries:
             eng = _engine(tables, imputer)
@@ -76,12 +77,13 @@ def run_workload(
                     morsel_rows=morsel_rows, minmax_opt=minmax_opt,
                 )
             imps += res.counters.imputations
+            batches += res.counters.impute_batches
             wall += res.counters.wall_seconds
             temps += res.counters.temp_tuples
             bloom += res.counters.filtered_by_bloom
             trig += res.counters.trigger_joins
             answers.extend(res.answer_tuples())
         out[strat] = StrategyResult(
-            strat, imps, wall, temps, bloom, trig, answers
+            strat, imps, batches, wall, temps, bloom, trig, answers
         )
     return out

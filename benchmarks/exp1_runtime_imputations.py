@@ -31,6 +31,7 @@ def run(fast: bool = True) -> List[Dict]:
                 rows.append({
                     "dataset": ds, "imputer": imp, "strategy": strat,
                     "imputations": r.imputations,
+                    "impute_batches": r.impute_batches,
                     "runtime_s": round(r.wall_seconds, 4),
                     "temp_tuples": r.temp_tuples,
                 })
@@ -61,5 +62,9 @@ def derived(rows: List[Dict]) -> Dict[str, float]:
             )
             out[f"{ds}/{imp}/speedup_vs_offline"] = round(
                 sub["offline"]["runtime_s"] / max(ad["runtime_s"], 1e-9), 2
+            )
+            # batched-service trajectory: values per imputer invocation
+            out[f"{ds}/{imp}/values_per_batch_adaptive"] = round(
+                ad["imputations"] / max(ad["impute_batches"], 1), 2
             )
     return out

@@ -7,7 +7,12 @@ The hash-join cases track the QUIP join spine's kernel trajectory: build and
 probe sides at 10^4–10^7 keys across duplication factors and missing-key
 rates, NumPy sort-join (oracle) vs the jnp ref path, with the Pallas pair
 verified at the smallest size (sequential interpret-mode build is a
-correctness tool, not a perf path)."""
+correctness tool, not a perf path).
+
+The neighbour-aggregation and knn-impute cases track the imputation
+trajectory (paper Fig. 2: KNN inference dominates): the vectorized
+bincount-argmax mode vs the seed per-row Python loop, and the end-to-end
+``KnnImputer.impute_attr`` batch cost on synthetic masked tables."""
 
 from __future__ import annotations
 
@@ -17,7 +22,10 @@ from typing import Dict, List
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.relation import MaskedRelation
+from repro.core.schema import ColumnSpec, Schema
 from repro.core.triggers import multi_match
+from repro.imputers.knn import KnnImputer
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 from repro.kernels.hashing import fold64, hash_positions_np
@@ -123,15 +131,89 @@ def run(fast: bool = True) -> List[Dict]:
                         np.array_equal(p0, p2) and np.array_equal(b0, b2)
                     )
                 rows.append(row)
+
+    # neighbour aggregation (KNN categorical mode / float mean)
+    def _mode_loop(m):
+        out = []
+        for r_ in m:
+            u, c = np.unique(r_, return_counts=True)
+            out.append(u[np.argmax(c)])
+        return np.asarray(out, dtype=np.float64)
+
+    agg_shapes = [(1 << 12, 5, 64), (1 << 14, 9, 512)] if fast else [
+        (1 << 12, 5, 64), (1 << 16, 9, 512), (1 << 18, 17, 4096),
+    ]
+    for b, k, vocab in agg_shapes:
+        neigh = rng.integers(0, vocab, size=(b, k)).astype(np.int64)
+        us_loop = _time(lambda: _mode_loop(neigh), reps=2)
+        us_np = _time(
+            lambda: kops.neighbor_aggregate(neigh, categorical=True,
+                                            impl="numpy")
+        )
+        us_ref = _time(
+            lambda: kops.neighbor_aggregate(neigh, categorical=True,
+                                            impl="ref")
+        )
+        exp = _mode_loop(neigh)
+        row = {
+            "kernel": "neighbor_aggregate", "b": b, "k": k, "vocab": vocab,
+            "us_per_call_loop": round(us_loop, 1),
+            "us_per_call_numpy": round(us_np, 1),
+            "us_per_call_ref": round(us_ref, 1),
+            "numpy_matches_loop": bool(np.array_equal(
+                kops.neighbor_aggregate(neigh, categorical=True,
+                                        impl="numpy"), exp)),
+            "ref_matches_loop": bool(np.array_equal(
+                kops.neighbor_aggregate(neigh, categorical=True, impl="ref"),
+                exp)),
+        }
+        if (b, k, vocab) == agg_shapes[0]:
+            row["pallas_matches_loop"] = bool(np.array_equal(
+                kops.neighbor_aggregate(neigh, categorical=True,
+                                        impl="pallas"), exp))
+        rows.append(row)
+
+    # end-to-end KNN impute batch (fit + one impute_attr flush)
+    knn_shapes = [(2000, 8, 512)] if fast else [(2000, 8, 512), (20000, 16, 4096)]
+    for n, d, batch in knn_shapes:
+        for kind in ("int", "float"):
+            specs = [ColumnSpec(f"B.c{i}", kind) for i in range(d)]
+            data, miss = {}, {}
+            for i, spec in enumerate(specs):
+                v = rng.integers(0, 32, n).astype(np.int64)
+                data[spec.name] = (
+                    v.astype(np.float64) + 0.5 if kind == "float" else v
+                )
+                miss[spec.name] = rng.random(n) < 0.2
+            table = MaskedRelation.from_columns(
+                Schema("B", specs), data, missing=miss, base_table="B"
+            )
+            imp = KnnImputer(k=5)
+            t_fit0 = time.perf_counter()
+            imp.fit(table)
+            fit_ms = (time.perf_counter() - t_fit0) * 1e3
+            tids = np.nonzero(miss["B.c0"])[0][:batch].astype(np.int64)
+            us = _time(lambda: imp.impute_attr(table, "B.c0", tids), reps=3)
+            rows.append({
+                "kernel": f"knn_impute_{kind}", "n": n, "d": d,
+                "batch": len(tids), "fit_ms": round(fit_ms, 1),
+                "us_per_call": round(us, 1),
+                "us_per_value": round(us / max(len(tids), 1), 2),
+            })
     return rows
 
 
 def derived(rows: List[Dict]) -> Dict[str, float]:
-    join_rows = [r for r in rows if r["kernel"] == "hash_join"]
+    by = lambda name: [r for r in rows if r["kernel"] == name]
+    join_rows = by("hash_join")
+    agg_rows = by("neighbor_aggregate")
     biggest = max(join_rows, key=lambda r: (r["n_build"], r["dup"]))
+    big_agg = max(agg_rows, key=lambda r: r["b"] * r["k"])
+    knn_int = by("knn_impute_int")
+    knn_flt = by("knn_impute_float")
     return {
-        "bloom_pallas_ok": float(rows[0]["pallas_matches_ref"]),
-        "knn_pallas_err": rows[1]["pallas_max_abs_err"],
+        "bloom_pallas_ok": float(by("bloom_probe")[0]["pallas_matches_ref"]),
+        "knn_pallas_err": by("masked_knn_distance")[0]["pallas_max_abs_err"],
         "join_ref_ok": float(
             all(r["ref_matches_numpy"] for r in join_rows)
         ),
@@ -144,4 +226,18 @@ def derived(rows: List[Dict]) -> Dict[str, float]:
         ),
         "join_ref_us_max": biggest["us_per_call_ref"],
         "join_numpy_us_max": biggest["us_per_call_numpy"],
+        "neighbor_agg_ok": float(
+            all(
+                r["numpy_matches_loop"] and r["ref_matches_loop"]
+                and r.get("pallas_matches_loop", True)
+                for r in agg_rows
+            )
+        ),
+        "neighbor_agg_loop_us_max": big_agg["us_per_call_loop"],
+        "neighbor_agg_numpy_us_max": big_agg["us_per_call_numpy"],
+        "neighbor_agg_speedup": round(
+            big_agg["us_per_call_loop"] / max(big_agg["us_per_call_numpy"], 1e-9), 1
+        ),
+        "knn_impute_int_us_per_value": knn_int[-1]["us_per_value"],
+        "knn_impute_float_us_per_value": knn_flt[-1]["us_per_value"],
     }

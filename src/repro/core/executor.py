@@ -136,6 +136,10 @@ class QuipExecutor:
         self.stats: RuntimeStats = engine.stats
         self.counters: ExecutionCounters = engine.counters
         self.counters.join_impl = self.join_impl
+        # batched imputation service: coalesce impute requests where the
+        # morsel pipeline is provably order-insensitive (see _join / _rho)
+        self.batching = bool(getattr(engine, "batching", False))
+        self._scan_whole = False  # build-side materialization flag
 
         ta = _table_attrs(tables)
         self.root = rewrite_for_quip(plan, query, ta)
@@ -211,6 +215,17 @@ class QuipExecutor:
         self._rho_pool: List[MaskedRelation] = []
         self._emitted: List[MaskedRelation] = []
         self._closed_attrs: Set[str] = set()
+        # ρ deferral: park arriving morsels and impute them in one fixpoint
+        # pass (one flush per attribute).  Only exact when ρ's mid-stream
+        # imputations cannot feed back into upstream pruning: with VF lists
+        # active, imputing a join key at ρ can complete its bloom filter and
+        # prune later probe morsels (the paper's BFC cascade), and MIN/MAX
+        # pushdown needs ρ's verified output to tighten its bound — in both
+        # cases deferral would change which values get imputed, so ρ stays
+        # morsel-streamed there.
+        self._defer_rho = (
+            self.batching and not self.use_vf and self._minmax is None
+        )
 
     # ------------------------------------------------------------------ #
     # MIN/MAX pushdown placement (paper §9.3)
@@ -300,7 +315,14 @@ class QuipExecutor:
         rows, tids = rows[ok_tid], tids[ok_tid]
         if len(rows) == 0:
             return rows, rows
-        values = self.engine.impute(t, attr, tids)
+        # operator boundary = decision point: queue this group's tids and
+        # flush immediately (the operator needs the values to verify).
+        # Cross-morsel coalescing happens upstream — whole-relation build
+        # sides and ρ deferral hand larger groups to this call — while the
+        # columnar cache dedups repeated requests across pipeline copies.
+        self.engine.enqueue(t, attr, tids)
+        self.engine.flush()
+        values = self.engine.lookup(t, attr, tids)
         passed = verify_values(node, attr, values)
         if extra_check is not None:
             passed &= extra_check.evaluate_values(values)
@@ -338,8 +360,12 @@ class QuipExecutor:
     def _scan(self, node: ScanNode) -> Iterator[MaskedRelation]:
         rel = self.tables[node.table]
         n = rel.num_rows
-        for lo in range(0, max(n, 1), self.morsel_rows):
-            chunk = rel.take(np.arange(lo, min(lo + self.morsel_rows, n)))
+        # under build-side batching, materialized operands scan as a single
+        # morsel so σ̂ below runs once and its impute requests flush as one
+        # deduplicated batch instead of one per morsel
+        step = max(n, 1) if self._scan_whole else self.morsel_rows
+        for lo in range(0, max(n, 1), step):
+            chunk = rel.take(np.arange(lo, min(lo + step, n)))
             if chunk.num_rows:
                 yield chunk
         for a in list(self.consumed):
@@ -386,7 +412,26 @@ class QuipExecutor:
         l_tabs, r_tabs = self.join_side_tables[node.node_id]
 
         # ---- build (right) side: materialize ---------------------------- #
-        parts = list(self._stream(node.children[1]))
+        # The build operand is blocked anyway, so with batching on, its
+        # Scan/Select chain runs whole-relation-at-a-time: σ̂ decision groups
+        # span the full operand and each attribute imputes in one flush.
+        # Exact by construction — during build materialization no bloom can
+        # complete (completion only fires for the attr being imputed, whose
+        # side is unconsumed) and no dynamic bound can move (ρ has not
+        # emitted yet), so per-morsel and whole-relation processing request
+        # identical imputation sets.  Nested-join build subtrees (bushy
+        # plans) keep the seed streaming path.  (adaptive's cost inputs
+        # coarsen from morsel to operand granularity; its decisions are
+        # wall-clock-dependent either way and answers are invariant.)
+        prev_whole = self._scan_whole
+        if self.batching and not any(
+            isinstance(sub, JoinNode) for sub in walk(node.children[1])
+        ):
+            self._scan_whole = True
+        try:
+            parts = list(self._stream(node.children[1]))
+        finally:
+            self._scan_whole = prev_whole
         build = (
             concat_relations(parts)
             if parts
@@ -511,6 +556,12 @@ class QuipExecutor:
     # -- ρ ------------------------------------------------------------------#
     def _rho(self, node: RhoNode) -> Iterator[MaskedRelation]:
         for morsel in self._stream(node.children[0]):
+            if self._defer_rho:
+                # park unprocessed: the fixpoint below imputes the whole
+                # pool with one flush per attribute (cross-morsel batching)
+                if morsel.num_rows:
+                    self._rho_pool.append(morsel)
+                continue
             out = self._rho_process(node, morsel, final=False)
             if out is not None and out.num_rows:
                 self.counters.temp_tuples += out.num_rows
@@ -666,7 +717,9 @@ class QuipExecutor:
                 tids.update(st[m & (st >= 0)].tolist())
         if tids:
             arr = np.array(sorted(tids), dtype=np.int64)
-            values = self.engine.impute(t, attr, arr)
+            self.engine.enqueue(t, attr, arr)
+            self.engine.flush()
+            values = self.engine.lookup(t, attr, arr)
             owner = next(
                 (n for n in self.join_nodes
                  if attr in self.join_attrs[n.node_id]),
@@ -869,7 +922,11 @@ def execute_quip(
 def execute_offline(
     query: Query, tables: Dict[str, MaskedRelation], engine
 ) -> ExecutionResult:
-    """Offline baseline: impute *every* missing value first, then evaluate."""
+    """Offline baseline: impute *every* missing value first, then evaluate.
+
+    All (table, attr) requests queue up front and flush once — the
+    cross-operator request queue coalesces them into one deduplicated batch
+    per attribute."""
     t0 = time.perf_counter()
     clean: Dict[str, MaskedRelation] = {}
     for t in query.tables:
@@ -877,9 +934,14 @@ def execute_offline(
         for a in rel.column_names():
             rows = np.nonzero(rel.is_missing(a))[0]
             if len(rows):
-                vals = engine.impute(t, a, rel.tids[t][rows])
-                rel.set_values(a, rows, vals)
+                engine.enqueue(t, a, rel.tids[t][rows])
         clean[t] = rel
+    engine.flush()
+    for t, rel in clean.items():
+        for a in rel.column_names():
+            rows = np.nonzero(rel.is_missing(a))[0]
+            if len(rows):
+                rel.set_values(a, rows, engine.lookup(t, a, rel.tids[t][rows]))
     rel = evaluate_clean(query, clean)
     engine.counters.wall_seconds = (
         time.perf_counter() - t0

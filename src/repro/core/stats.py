@@ -45,6 +45,8 @@ class RuntimeStats:
         self.join_tests: Dict[int, _Avg] = defaultdict(_Avg)  # node_id -> T_o obs
         self.join_test_time: Dict[int, _Avg] = defaultdict(_Avg)  # node_id -> TTJoin
         self.missing_counter: Dict[str, int] = {}
+        self.flush_batch: Dict[str, _Avg] = defaultdict(_Avg)  # attr -> dedup batch size per flush
+        self.flush_requested: Dict[str, _Avg] = defaultdict(_Avg)  # attr -> queued tids per flush
         self.default_impute_cost = default_impute_cost
 
     # -- impute(a) ------------------------------------------------------- #
@@ -55,6 +57,19 @@ class RuntimeStats:
     def impute(self, attr: str) -> float:
         m = self.impute_cost[attr].mean
         return m if m is not None else self.default_impute_cost
+
+    # -- flush telemetry (batched imputation service) ---------------------#
+    def record_flush(self, attr: str, requested: int, computed: int) -> None:
+        """One flushed batch of ``attr``: ``requested`` queued tids coalesced
+        into ``computed`` deduplicated model evaluations."""
+        if computed > 0:
+            self.flush_batch[attr].add(computed, 1)
+        if requested > 0:
+            self.flush_requested[attr].add(requested, 1)
+
+    def mean_flush_size(self, attr: str) -> Optional[float]:
+        """Average deduplicated batch size per flush of ``attr``."""
+        return self.flush_batch[attr].mean
 
     # -- selectivities ----------------------------------------------------#
     def record_selectivity(self, node_id: int, passed: int, seen: int) -> None:
@@ -97,6 +112,8 @@ class ExecutionCounters:
     """Benchmark-facing counters (paper Experiments 1–5)."""
 
     imputations: int = 0
+    impute_batches: int = 0  # imputer invocations (deduplicated batches)
+    impute_flushes: int = 0  # service flush() calls that had queued work
     imputation_seconds: float = 0.0
     temp_tuples: int = 0
     join_tests: int = 0

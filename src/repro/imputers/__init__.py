@@ -1,4 +1,4 @@
-from repro.imputers.base import ImputationEngine, Imputer
+from repro.imputers.base import ImputationEngine, ImputationService, Imputer
 from repro.imputers.mean import MeanImputer
 from repro.imputers.knn import KnnImputer
 from repro.imputers.gbdt import GbdtImputer
@@ -6,6 +6,7 @@ from repro.imputers.locater import LocaterImputer
 
 __all__ = [
     "ImputationEngine",
+    "ImputationService",
     "Imputer",
     "MeanImputer",
     "KnnImputer",

@@ -1,4 +1,4 @@
-"""Imputer interface + the engine QUIP operators call into.
+"""Imputer interface + the columnar imputation service QUIP operators call into.
 
 Imputers follow the paper's blocking / non-blocking taxonomy (§2.1):
 
@@ -8,29 +8,43 @@ Imputers follow the paper's blocking / non-blocking taxonomy (§2.1):
   matrix, GBDT).  Training cost is charged once on first use; inference cost
   per value afterwards.
 
-The engine deduplicates by (table, attr, tid) — the same missing value
-imputed through two pipeline copies is computed (and counted) once, and all
-copies observe the same value (this is what makes snapshot writeback
-consistent).  ``cost_per_value`` lets benchmarks model expensive imputers
-(KNN inference, LOCATER) without wall-clock sleeps: simulated seconds flow
-into both the decision-function statistics and the reported runtimes.
+The service is columnar and batched: per (table, attr) it keeps a dense
+value array plus a filled-bitmask the size of the base table (no Python
+dicts on the hot path), deduplicates requested tids with ``np.unique``
+against the mask, and exposes a request-queue API — operators ``enqueue``
+tid sets as they stream and the service coalesces them across morsels and
+pipeline copies, computing each batch in a single ``impute_attr`` call at
+``flush`` time.  The same missing value imputed through two pipeline copies
+is computed (and counted) once, and all copies observe the same value —
+this is what makes snapshot writeback consistent.
+
+``cost_per_value`` lets benchmarks model expensive imputers (KNN inference,
+LOCATER) without wall-clock sleeps: simulated seconds flow into both the
+decision-function statistics and the reported runtimes.
 """
 
 from __future__ import annotations
 
+import os
 import time
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.relation import MaskedRelation
 from repro.core.stats import ExecutionCounters, RuntimeStats
 
-__all__ = ["Imputer", "ImputationEngine"]
+__all__ = ["Imputer", "ImputationService", "ImputationEngine"]
 
 
 class Imputer:
-    """Per-(table) imputation model; ``impute_attr`` fills one attribute."""
+    """Per-(table) imputation model; ``impute_attr`` fills one attribute.
+
+    ``impute_attr`` receives a *deduplicated, sorted* int64 batch of base-row
+    ids and must return one value per id (any float/int array — the service
+    owns the final cast to the column dtype).  Implementations should be
+    batched/vectorized: the service calls them once per flush, not per row.
+    """
 
     blocking: bool = False
     cost_per_value: float = 0.0  # simulated seconds per imputed value
@@ -45,7 +59,33 @@ class Imputer:
         raise NotImplementedError
 
 
-class ImputationEngine:
+def _resolve_batching(batching: Optional[bool]) -> bool:
+    """Explicit argument > ``QUIP_IMPUTE_BATCH`` env ("0" disables) > on."""
+    if batching is not None:
+        return bool(batching)
+    return os.environ.get("QUIP_IMPUTE_BATCH", "1") != "0"
+
+
+class ImputationService:
+    """Columnar, request-queued imputation engine.
+
+    Lifecycle per (table, attr):
+
+    1. operators ``enqueue(table, attr, tids)`` — O(1) append, no dedup yet;
+    2. ``flush()`` at a decision point concatenates the queue, vectorized-
+       dedups it (``np.unique`` + the dense filled mask), runs the model
+       once over the still-missing tids, and writes the results into the
+       dense column cache;
+    3. ``lookup(table, attr, tids)`` gathers values (cast to the column
+       dtype, round-half-even for integer columns).
+
+    ``impute`` = enqueue + flush + lookup, the synchronous convenience the
+    seed engine exposed; dedup/caching semantics are identical, so answers
+    and ``counters.imputations`` are unchanged — only the *number of model
+    invocations* (``counters.impute_batches``) shrinks when call sites
+    enqueue several morsels before flushing.
+    """
+
     def __init__(
         self,
         tables: Dict[str, MaskedRelation],
@@ -53,15 +93,21 @@ class ImputationEngine:
         per_attr: Optional[Dict[str, Imputer]] = None,
         stats: Optional[RuntimeStats] = None,
         counters: Optional[ExecutionCounters] = None,
+        batching: Optional[bool] = None,
     ):
         self.tables = tables
         self._default = default
         self._per_attr = dict(per_attr or {})
         self.stats = stats or RuntimeStats()
         self.counters = counters or ExecutionCounters()
+        self.batching = _resolve_batching(batching)
         self._models: Dict[Tuple[str, str], Imputer] = {}
         self._fitted: set = set()
-        self._cache: Dict[Tuple[str, str], Dict[int, float]] = {}
+        # dense per-(table, attr) column caches: float64 values + filled mask
+        self._values: Dict[Tuple[str, str], np.ndarray] = {}
+        self._filled: Dict[Tuple[str, str], np.ndarray] = {}
+        # request queue: (table, attr) -> list of enqueued tid arrays
+        self._queue: Dict[Tuple[str, str], List[np.ndarray]] = {}
         self.simulated_seconds: float = 0.0
 
     # ------------------------------------------------------------------ #
@@ -81,29 +127,113 @@ class ImputationEngine:
                 self.counters.imputation_seconds += train_wall + model.train_cost
         return model
 
+    def _column_cache(self, table: str, attr: str
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+        key = (table, attr)
+        if key not in self._values:
+            n = self.tables[table].num_rows
+            self._values[key] = np.zeros(n, dtype=np.float64)
+            self._filled[key] = np.zeros(n, dtype=bool)
+        return self._values[key], self._filled[key]
+
+    def _cast(self, table: str, attr: str, values: np.ndarray) -> np.ndarray:
+        dtype = self.tables[table].cols[attr].dtype
+        if np.issubdtype(dtype, np.floating):
+            return values.astype(dtype)
+        if not np.isfinite(values).all():
+            # np.round(nan).astype(int) would silently yield INT64_MIN; the
+            # seed engine's per-element cast raised here, so keep failing loud
+            raise ValueError(
+                f"non-finite imputation for int column {table}.{attr}"
+            )
+        # round-half-even before the integer cast: a float imputation (KNN
+        # mean 2.7) must round, not truncate, into an int column
+        return np.round(values).astype(dtype)
+
     # ------------------------------------------------------------------ #
-    def impute(self, table: str, attr: str, tids: np.ndarray) -> np.ndarray:
-        """Values for base-row ids ``tids`` of ``table.attr`` (deduplicated)."""
+    # request-queue API
+    # ------------------------------------------------------------------ #
+    def enqueue(self, table: str, attr: str, tids: np.ndarray) -> None:
+        """Queue base-row ids of ``table.attr`` for the next ``flush``."""
         tids = np.asarray(tids, dtype=np.int64)
-        cache = self._cache.setdefault((table, attr), {})
-        todo = np.array(
-            sorted({int(t) for t in tids.tolist() if int(t) not in cache}),
-            dtype=np.int64,
-        )
-        if len(todo):
+        if len(tids) == 0:
+            return
+        self._queue.setdefault((table, attr), []).append(tids)
+
+    def pending_requests(self) -> int:
+        """Queued (pre-dedup) request count — flush/batch telemetry."""
+        return sum(len(t) for parts in self._queue.values() for t in parts)
+
+    def flush(self) -> None:
+        """Coalesce the queue: per (table, attr), one deduplicated batch
+        through the model; results land in the dense column cache."""
+        if not self._queue:
+            return
+        queue, self._queue = self._queue, {}
+        self.counters.impute_flushes += 1
+        for (table, attr), parts in queue.items():
+            tids = parts[0] if len(parts) == 1 else np.concatenate(parts)
+            requested = len(tids)
+            values, filled = self._column_cache(table, attr)
+            uniq = np.unique(tids)  # vectorized dedup (sorted, unique)
+            todo = uniq[~filled[uniq]]
+            if len(todo) == 0:
+                continue
             model = self._model_for(table, attr)
             t0 = time.perf_counter()
-            vals = np.asarray(model.impute_attr(self.tables[table], attr, todo))
+            vals = np.asarray(
+                model.impute_attr(self.tables[table], attr, todo),
+                dtype=np.float64,
+            )
             wall = time.perf_counter() - t0
             sim = model.cost_per_value * len(todo)
             self.simulated_seconds += sim
             self.counters.imputations += len(todo)
+            self.counters.impute_batches += 1
             self.counters.imputation_seconds += wall + sim
             self.stats.record_imputation(attr, len(todo), wall + sim)
-            for t, v in zip(todo.tolist(), vals.tolist()):
-                cache[t] = v
-        dtype = self.tables[table].cols[attr].dtype
-        return np.asarray([cache[int(t)] for t in tids.tolist()], dtype=dtype)
+            self.stats.record_flush(attr, requested, len(todo))
+            values[todo] = vals
+            filled[todo] = True
+
+    def lookup(self, table: str, attr: str, tids: np.ndarray) -> np.ndarray:
+        """Cached values for ``tids`` (all must have been flushed)."""
+        tids = np.asarray(tids, dtype=np.int64)
+        values, filled = self._column_cache(table, attr)
+        if len(tids) and not filled[tids].all():
+            raise KeyError(
+                f"lookup of unimputed tids for {table}.{attr}: "
+                f"{tids[~filled[tids]][:8].tolist()} (flush() missing?)"
+            )
+        return self._cast(table, attr, values[tids])
+
+    # ------------------------------------------------------------------ #
+    def impute(self, table: str, attr: str, tids: np.ndarray) -> np.ndarray:
+        """Values for base-row ids ``tids`` of ``table.attr`` (deduplicated).
+
+        Synchronous convenience: enqueue + flush + lookup in one call."""
+        self.enqueue(table, attr, tids)
+        self.flush()
+        return self.lookup(table, attr, np.asarray(tids, dtype=np.int64))
+
+    # ------------------------------------------------------------------ #
+    def writeback_snapshot(
+        self, table: Optional[str] = None
+    ) -> Dict[Tuple[str, str], Tuple[np.ndarray, np.ndarray]]:
+        """Every imputed cell so far: ``{(table, attr): (tids, values)}``.
+
+        Values are dtype-cast exactly as ``lookup`` returns them, so a
+        caller materializing them into base tables observes the same values
+        every pipeline copy saw — the consistency guarantee of the dedup
+        cache, preserved across the batched refactor."""
+        out: Dict[Tuple[str, str], Tuple[np.ndarray, np.ndarray]] = {}
+        for (t, a), filled in self._filled.items():
+            if table is not None and t != table:
+                continue
+            tids = np.nonzero(filled)[0].astype(np.int64)
+            if len(tids):
+                out[(t, a)] = (tids, self._cast(t, a, self._values[(t, a)][tids]))
+        return out
 
     # ------------------------------------------------------------------ #
     def total_missing(self, tables: Optional[Dict[str, MaskedRelation]] = None
@@ -116,3 +246,7 @@ class ImputationEngine:
                 for a in rel.column_names()
             )
         )
+
+
+# The seed engine's name; the service is a drop-in replacement.
+ImputationEngine = ImputationService

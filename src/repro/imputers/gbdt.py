@@ -96,6 +96,9 @@ class GbdtImputer(Imputer):
     # ------------------------------------------------------------------ #
     def impute_attr(self, table: MaskedRelation, attr: str, tids: np.ndarray
                     ) -> np.ndarray:
+        tids = np.asarray(tids, dtype=np.int64)
+        if len(tids) == 0:  # batched interface: empty flush batch
+            return np.zeros(0, dtype=np.float64)
         if attr not in self._models:
             self._train_attr(table, attr)
         base, stumps = self._models[attr]
@@ -103,7 +106,7 @@ class GbdtImputer(Imputer):
         keep = np.ones(self._feat.shape[1], dtype=bool)
         keep[ai] = False
         X = self._feat[tids][:, keep]
-        pred = np.full(len(tids), base)
+        pred = np.full(len(tids), base, dtype=np.float64)
         for f, thr, lo_v, hi_v in stumps:
             pred += np.where(X[:, f] <= thr, lo_v, hi_v)
         if not np.issubdtype(table.cols[attr].dtype, np.floating):

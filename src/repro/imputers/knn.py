@@ -4,7 +4,9 @@ The reference matrix is the whole table (standardized numeric view, missing
 cells masked).  Inference computes partial L2 distances over co-observed
 dimensions — the imputation hot spot the paper measures (Fig. 2: KNN
 inference dominates query time) — via the Pallas masked-distance kernel on
-TPU (pure-jnp oracle on CPU; see ``repro.kernels``).
+TPU (pure-jnp oracle on CPU; see ``repro.kernels``).  Neighbour aggregation
+(mean / categorical mode) is the vectorized ``kernels.ops.neighbor_aggregate``
+op, dispatched with ``QUIP_KNN_IMPL`` (numpy | ref | pallas).
 """
 
 from __future__ import annotations
@@ -25,11 +27,12 @@ class KnnImputer(Imputer):
 
     def __init__(self, k: int = 5, cost_per_value: float = 0.0,
                  train_cost: float = 0.0, impl: Optional[str] = None,
-                 batch: int = 1024):
+                 agg_impl: Optional[str] = None, batch: int = 1024):
         self.k = k
         self.cost_per_value = cost_per_value
         self.train_cost = train_cost
-        self.impl = impl
+        self.impl = impl  # masked-distance dispatch (None: backend default)
+        self.agg_impl = agg_impl  # neighbour aggregation (None: QUIP_KNN_IMPL)
         self.batch = batch
         self._feat = None  # (n, d) float32, 0-filled
         self._mask = None  # (n, d) float32 observed mask
@@ -76,13 +79,10 @@ class KnnImputer(Imputer):
             )
             nn = np.asarray(nn)
             neigh = tgt[nn]  # (b, k) raw target values
-            if is_int:
-                # mode over neighbours (dictionary-coded categorical)
-                vals = []
-                for row in neigh:
-                    u, c = np.unique(row, return_counts=True)
-                    vals.append(u[np.argmax(c)])
-                out[lo : lo + len(idx)] = np.asarray(vals)
-            else:
-                out[lo : lo + len(idx)] = neigh.mean(axis=1)
+            # vectorized neighbour aggregation: bincount-argmax mode for
+            # dictionary-coded categoricals, mean for floats (no per-row
+            # Python loop — this is the Fig. 2 inference hot spot)
+            out[lo : lo + len(idx)] = kops.neighbor_aggregate(
+                neigh, categorical=is_int, impl=self.agg_impl
+            )
         return out

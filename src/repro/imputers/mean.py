@@ -44,6 +44,8 @@ class MeanImputer(Imputer):
 
     def impute_attr(self, table: MaskedRelation, attr: str, tids: np.ndarray
                     ) -> np.ndarray:
+        # batched interface: one constant per attribute, broadcast over the
+        # whole deduplicated tid batch in a single allocation
         if attr not in self._fill:
             self.fit(table)
-        return np.full(len(tids), self._fill[attr])
+        return np.full(len(tids), self._fill[attr], dtype=np.float64)

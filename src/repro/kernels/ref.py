@@ -18,6 +18,8 @@ __all__ = [
     "hash_join_ref",
     "masked_distance_ref",
     "masked_knn_ref",
+    "neighbor_mean_ref",
+    "neighbor_mode_ref",
 ]
 
 
@@ -110,6 +112,25 @@ def masked_knn_ref(
     dmat = masked_distance_ref(q, qm, r, rm)
     neg, idx = jax.lax.top_k(-dmat, k)
     return -neg, idx
+
+
+def neighbor_mean_ref(vals: jnp.ndarray) -> jnp.ndarray:
+    """KNN float aggregation: per-row mean of the (b, k) neighbour targets."""
+    return vals.astype(jnp.float32).mean(axis=1)
+
+
+def neighbor_mode_ref(codes: jnp.ndarray, num_classes: int) -> jnp.ndarray:
+    """KNN categorical aggregation: per-row mode over dictionary codes.
+
+    codes: (b, k) int32 in [0, num_classes).  Returns (b,) int32 — the class
+    with the highest count; ties break to the *smallest* class index
+    (``jnp.argmax`` returns the first maximum), which, with classes produced
+    by ``np.unique`` (ascending values), matches the per-row
+    ``u[np.argmax(c)]`` loop of the seed imputer bit-for-bit.
+    """
+    onehot = jax.nn.one_hot(codes, num_classes, dtype=jnp.int32)  # (b, k, U)
+    counts = onehot.sum(axis=1)  # (b, U)
+    return jnp.argmax(counts, axis=1).astype(jnp.int32)
 
 
 def attention_ref(q, k, v, causal: bool = True, window=None, scale=None):

@@ -160,6 +160,43 @@ def test_hash_join_probe_pallas_matches_ref(nb, np_, card):
 
 
 # --------------------------------------------------------------------------- #
+# neighbour aggregation kernels (KNN mean / categorical mode)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("b,k,classes", [
+    (1, 1, 1), (7, 3, 5), (128, 5, 130), (200, 9, 260), (130, 8, 1),
+])
+def test_neighbor_mode_pallas_matches_ref(b, k, classes):
+    from repro.kernels.neighbor_agg import neighbor_mode_pallas
+
+    rng = np.random.default_rng(b * 100 + k * 10 + classes)
+    codes = rng.integers(0, classes, size=(b, k)).astype(np.int32)
+    ref = np.asarray(kref.neighbor_mode_ref(jnp.asarray(codes), classes))
+    pl = np.asarray(neighbor_mode_pallas(
+        jnp.asarray(codes), num_classes=classes, interpret=True
+    ))
+    np.testing.assert_array_equal(ref, pl)
+
+
+@pytest.mark.parametrize("b,k", [(1, 1), (5, 4), (128, 5), (300, 9)])
+def test_neighbor_mean_pallas_matches_ref(b, k):
+    from repro.kernels.neighbor_agg import neighbor_mean_pallas
+
+    rng = np.random.default_rng(b + k)
+    vals = rng.normal(size=(b, k)).astype(np.float32)
+    ref = np.asarray(kref.neighbor_mean_ref(jnp.asarray(vals)))
+    pl = np.asarray(neighbor_mean_pallas(jnp.asarray(vals), interpret=True))
+    np.testing.assert_allclose(ref, pl, rtol=1e-6, atol=1e-6)
+
+
+def test_neighbor_mode_tie_breaks_to_smallest_value():
+    # two classes with equal count: the smaller value must win in every impl
+    neigh = np.array([[9, 2, 2, 9], [5, 5, 1, 1]], dtype=np.int64)
+    for impl in ("numpy", "ref", "pallas"):
+        got = kops.neighbor_aggregate(neigh, categorical=True, impl=impl)
+        np.testing.assert_array_equal(got, [2.0, 1.0], err_msg=f"impl={impl}")
+
+
+# --------------------------------------------------------------------------- #
 # flash attention kernel
 # --------------------------------------------------------------------------- #
 @pytest.mark.parametrize("b,s,h,kv,d", [
