@@ -21,6 +21,7 @@ from benchmarks import (
     exp5_plans,
     exp6_minmax,
     exp7_query_baseline,
+    exp8_serving,
     kernels_micro,
 )
 
@@ -32,6 +33,7 @@ MODULES = [
     exp5_plans,
     exp6_minmax,
     exp7_query_baseline,
+    exp8_serving,
     kernels_micro,
 ]
 

@@ -211,6 +211,9 @@ class QuipExecutor:
         ):
             self._install_minmax(agg)
 
+        # set when steps() is exhausted (run() drives it to completion)
+        self.result: Optional[ExecutionResult] = None
+
         # ρ bookkeeping
         self._rho_pool: List[MaskedRelation] = []
         self._emitted: List[MaskedRelation] = []
@@ -781,8 +784,18 @@ class QuipExecutor:
     # ------------------------------------------------------------------ #
     # top-level run
     # ------------------------------------------------------------------ #
-    def run(self) -> ExecutionResult:
-        t0 = time.perf_counter()
+    def steps(self) -> Iterator[None]:
+        """Morsel-granular coroutine execution.
+
+        Yields control after every top-level morsel so a scheduler can
+        interleave several executors (the QuipService serving layer steps
+        many of these round-robin — no threads, plain generator stepping).
+        When the generator is exhausted, :attr:`result` holds the
+        :class:`ExecutionResult`.  ``counters.wall_seconds`` accumulates only
+        this executor's *active* step time (plus its engine's simulated
+        seconds), so latencies stay meaningful under interleaving.
+        """
+        active = 0.0
         top = self.root
         agg = None
         proj = None
@@ -796,26 +809,39 @@ class QuipExecutor:
             body = top
 
         chunks: List[MaskedRelation] = []
-        for morsel in self._stream(body):
-            if morsel.num_rows == 0:
-                continue
-            chunks.append(morsel)
-            if self._minmax is not None:
-                self._update_minmax(morsel)
+        stream = self._stream(body)
+        while True:
+            t0 = time.perf_counter()
+            try:
+                morsel = next(stream)
+            except StopIteration:
+                active += time.perf_counter() - t0
+                break
+            if morsel.num_rows:
+                chunks.append(morsel)
+                if self._minmax is not None:
+                    self._update_minmax(morsel)
+            active += time.perf_counter() - t0
+            yield
+
+        t0 = time.perf_counter()
         rel = (
             concat_relations(chunks)
             if chunks
             else self._pad_for_tables(self.query.tables, 0)
         )
-
         if agg is not None:
             rel = _aggregate(rel, agg)
         elif proj is not None:
             rel = rel.project(list(proj))
-        self.counters.wall_seconds = (
-            time.perf_counter() - t0
-        ) + self.engine.simulated_seconds
-        return ExecutionResult(rel, self.counters, self.stats, self.root)
+        active += time.perf_counter() - t0
+        self.counters.wall_seconds = active + self.engine.simulated_seconds
+        self.result = ExecutionResult(rel, self.counters, self.stats, self.root)
+
+    def run(self) -> ExecutionResult:
+        for _ in self.steps():
+            pass
+        return self.result
 
     def _update_minmax(self, rel: MaskedRelation) -> None:
         dyn = self._minmax

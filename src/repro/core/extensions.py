@@ -9,7 +9,16 @@
   multiset-subtracting the answer tuples.
 * ``execute_nested`` — outer query with ``attr IN (subquery)``: QUIP runs
   the subquery first (its ρ guarantees no missing values in its output),
-  then the outer query with the result as an ``in``-set predicate.
+  then the outer query with the result as an ``in``-set predicate.  An
+  empty subquery result becomes an empty ``in``-set — a proper always-false
+  predicate (no sentinel values).
+
+Each extension reports the *full* merged :class:`ExecutionCounters` of its
+branches (imputations, impute_batches, impute_flushes, join_impl, ...), not
+just an imputation count.  The combination helpers (``union_answers``,
+``minus_answers``, ``nested_outer_query``, ``merge_stats``) are shared with
+the serving layer, which routes the same compound queries through
+QuipService sessions (``repro.service.server``).
 """
 
 from __future__ import annotations
@@ -17,30 +26,77 @@ from __future__ import annotations
 from collections import Counter
 from typing import Dict, List, Tuple
 
-import numpy as np
-
 from repro.core.executor import ExecutionResult, execute_quip
 from repro.core.plan import Query
 from repro.core.predicates import SelectionPredicate
-from repro.core.relation import MaskedRelation
+from repro.core.stats import ExecutionCounters
 
-__all__ = ["execute_union", "execute_minus", "execute_nested"]
+__all__ = [
+    "execute_union",
+    "execute_minus",
+    "execute_nested",
+    "union_answers",
+    "minus_answers",
+    "nested_outer_query",
+    "merge_stats",
+]
 
 
 def _run(q: Query, tables, engine, strategy: str) -> ExecutionResult:
     return execute_quip(q, tables, engine, strategy=strategy)
 
 
+# --------------------------------------------------------------------------- #
+# combination helpers (shared by the direct entry points and QuipService)
+# --------------------------------------------------------------------------- #
+def merge_stats(*counters: ExecutionCounters) -> Dict:
+    """Merged branch counters as the extensions' stats dict: every
+    :class:`ExecutionCounters` field, element-wise summed."""
+    total = counters[0]
+    for c in counters[1:]:
+        total = total.merged(c)
+    return total.as_dict()
+
+
+def union_answers(left: List[tuple], right: List[tuple]) -> List[tuple]:
+    return left + right
+
+
+def minus_answers(left: List[tuple], right: List[tuple]) -> List[tuple]:
+    return sorted((Counter(left) - Counter(right)).elements())
+
+
+def nested_outer_query(outer: Query, in_attr: str,
+                       sub_result: ExecutionResult) -> Query:
+    """Rewrite ``outer`` with the materialized subquery ``in``-set.  The
+    subquery's ρ guarantees no missing values survive in its output; an
+    empty result yields an empty ``in``-set (always-false predicate)."""
+    assert len(sub_result.relation.column_names()) >= 1, "subquery needs a column"
+    col = sub_result.relation.column_names()[0]
+    rel = sub_result.relation
+    values = frozenset(
+        int(v) for v in rel.values(col)[rel.is_present(col)]
+    )
+    pred = SelectionPredicate(in_attr, "in", values)
+    return Query(
+        tables=outer.tables,
+        selections=tuple(outer.selections) + (pred,),
+        joins=outer.joins,
+        projection=outer.projection,
+        aggregate=outer.aggregate,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# direct (cold-engine) entry points
+# --------------------------------------------------------------------------- #
 def execute_union(left: Query, right: Query, tables, engine_factory,
                   strategy: str = "adaptive") -> Tuple[List[tuple], Dict]:
     el, er = engine_factory(), engine_factory()
     rl = _run(left, tables, el, strategy)
     rr = _run(right, tables, er, strategy)
-    answers = rl.answer_tuples() + rr.answer_tuples()
-    stats = {
-        "imputations": rl.counters.imputations + rr.counters.imputations
-    }
-    return answers, stats
+    answers = union_answers(rl.answer_tuples(), rr.answer_tuples())
+    return answers, merge_stats(rl.counters, rr.counters)
 
 
 def execute_minus(left: Query, right: Query, tables, engine_factory,
@@ -51,12 +107,8 @@ def execute_minus(left: Query, right: Query, tables, engine_factory,
     el, er = engine_factory(), engine_factory()
     rl = _run(left, tables, el, strategy)
     rr = _run(right, tables, er, strategy)
-    remaining = Counter(rl.answer_tuples()) - Counter(rr.answer_tuples())
-    answers = sorted(remaining.elements())
-    stats = {
-        "imputations": rl.counters.imputations + rr.counters.imputations
-    }
-    return answers, stats
+    answers = minus_answers(rl.answer_tuples(), rr.answer_tuples())
+    return answers, merge_stats(rl.counters, rr.counters)
 
 
 def execute_nested(outer: Query, in_attr: str, sub: Query, tables,
@@ -68,22 +120,7 @@ def execute_nested(outer: Query, in_attr: str, sub: Query, tables,
     ``in``-set."""
     es = engine_factory()
     rs = _run(sub, tables, es, strategy)
-    assert len(rs.relation.column_names()) >= 1, "subquery needs a column"
-    col = rs.relation.column_names()[0]
-    values = frozenset(
-        int(v) for v in rs.relation.values(col)[rs.relation.is_present(col)]
-    )
-    pred = SelectionPredicate(in_attr, "in", values or frozenset({-(2**60)}))
-    outer2 = Query(
-        tables=outer.tables,
-        selections=tuple(outer.selections) + (pred,),
-        joins=outer.joins,
-        projection=outer.projection,
-        aggregate=outer.aggregate,
-    )
+    outer2 = nested_outer_query(outer, in_attr, rs)
     eo = engine_factory()
     ro = _run(outer2, tables, eo, strategy)
-    stats = {
-        "imputations": rs.counters.imputations + ro.counters.imputations
-    }
-    return ro.answer_tuples(), stats
+    return ro.answer_tuples(), merge_stats(rs.counters, ro.counters)

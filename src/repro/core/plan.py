@@ -26,6 +26,7 @@ __all__ = [
     "AggregateNode",
     "walk",
     "downstream_chain",
+    "clone_plan",
 ]
 
 _ids = itertools.count()
@@ -179,6 +180,30 @@ def downstream_chain(node: PlanNode) -> List[PlanNode]:
         out.append(cur)
         cur = cur.parent
     return out
+
+
+def clone_plan(node: PlanNode) -> PlanNode:
+    """Structural copy of a plan tree with fresh nodes (and node ids).
+
+    Executors mutate plan nodes — the QUIP rewriter re-wraps the root in ρ
+    (reassigning parent pointers) and rebuilds verify/filter sets — so a plan
+    held in a cache must hand each execution its own tree.  Predicates are
+    immutable (frozen dataclasses) and are shared, not copied.
+    """
+    children = [clone_plan(c) for c in node.children]
+    if isinstance(node, ScanNode):
+        return ScanNode(node.table)
+    if isinstance(node, SelectNode):
+        return SelectNode(node.pred, children[0])
+    if isinstance(node, JoinNode):
+        return JoinNode(node.pred, children[0], children[1])
+    if isinstance(node, RhoNode):
+        return RhoNode(children[0], node.attrs)
+    if isinstance(node, ProjectNode):
+        return ProjectNode(node.attrs, children[0])
+    if isinstance(node, AggregateNode):
+        return AggregateNode(node.agg, children[0])
+    raise TypeError(f"clone_plan: unknown node {type(node)!r}")
 
 
 def base_tables(node: PlanNode) -> Tuple[str, ...]:

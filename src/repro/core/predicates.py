@@ -57,6 +57,10 @@ class SelectionPredicate:
 
     def evaluate_values(self, v: np.ndarray) -> np.ndarray:
         if self.op == "in":
+            if not self.value:
+                # empty IN-set (e.g. an empty subquery result): a proper
+                # always-false predicate — no row can match
+                return np.zeros(np.shape(v), dtype=bool)
             table = np.asarray(sorted(self.value))
             idx = np.searchsorted(table, v)
             idx = np.clip(idx, 0, len(table) - 1)

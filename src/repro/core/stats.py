@@ -19,9 +19,25 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import defaultdict
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
-__all__ = ["RuntimeStats", "ExecutionCounters"]
+__all__ = [
+    "RuntimeStats",
+    "ExecutionCounters",
+    "QueryRecord",
+    "ServingStats",
+    "nearest_rank_quantile",
+]
+
+
+def nearest_rank_quantile(values: List[float], q: float) -> float:
+    """Nearest-rank quantile over ``values`` (0.0 if empty) — the single
+    definition used by both serving telemetry and the benchmarks."""
+    if not values:
+        return 0.0
+    ordered = sorted(values)
+    idx = min(len(ordered) - 1, max(0, int(round(q * (len(ordered) - 1)))))
+    return ordered[idx]
 
 
 @dataclasses.dataclass
@@ -114,6 +130,7 @@ class ExecutionCounters:
     imputations: int = 0
     impute_batches: int = 0  # imputer invocations (deduplicated batches)
     impute_flushes: int = 0  # service flush() calls that had queued work
+    impute_cross_hits: int = 0  # values served from cells another query filled
     imputation_seconds: float = 0.0
     temp_tuples: int = 0
     join_tests: int = 0
@@ -126,3 +143,92 @@ class ExecutionCounters:
 
     def as_dict(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
+
+    def merged(self, other: "ExecutionCounters") -> "ExecutionCounters":
+        """Element-wise sum of all numeric counters (compound queries and
+        serving aggregation); ``join_impl`` is kept when both branches agree
+        and reported as ``"mixed"`` otherwise."""
+        out = ExecutionCounters()
+        for f in dataclasses.fields(self):
+            if f.name == "join_impl":
+                continue
+            setattr(out, f.name, getattr(self, f.name) + getattr(other, f.name))
+        out.join_impl = (
+            self.join_impl if self.join_impl == other.join_impl else "mixed"
+        )
+        return out
+
+
+# --------------------------------------------------------------------------- #
+# serving telemetry (QuipService — see repro.service and docs/serving.md)
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class QueryRecord:
+    """One served query: scheduling timeline + its execution counters."""
+
+    ticket: int
+    tenant: Optional[int]
+    strategy: str
+    queue_wait_s: float  # submit → admission
+    latency_s: float  # submit → result available
+    plan_cache_hit: bool
+    counters: ExecutionCounters
+
+    def as_dict(self) -> Dict[str, object]:
+        d = dataclasses.asdict(self)
+        d["counters"] = self.counters.as_dict()
+        return d
+
+
+class ServingStats:
+    """Aggregate telemetry of a QuipService instance.
+
+    Collects one :class:`QueryRecord` per finished query plus service-level
+    gauges (observed concurrency, admission queueing).  Plan-cache hit/miss
+    counts live on the cache itself; ``summary`` merges both views into the
+    flat ``serving_*`` metric dict the benchmarks record."""
+
+    def __init__(self):
+        self.records: List[QueryRecord] = []
+        self.max_concurrent = 0
+        self.admission_queued = 0  # submissions that had to wait
+
+    def observe_concurrency(self, running: int) -> None:
+        self.max_concurrent = max(self.max_concurrent, int(running))
+
+    def record_query(self, record: QueryRecord) -> None:
+        self.records.append(record)
+
+    # -- aggregates -------------------------------------------------------#
+    def latency_quantile(self, q: float) -> float:
+        """Latency quantile in seconds over finished queries (0 if none)."""
+        return nearest_rank_quantile([r.latency_s for r in self.records], q)
+
+    def total_counters(self) -> ExecutionCounters:
+        if not self.records:
+            return ExecutionCounters()
+        # fold from the first record so agreeing join_impl labels survive
+        # (a zero seed would taint the label to "mixed")
+        total = dataclasses.replace(self.records[0].counters)
+        for r in self.records[1:]:
+            total = total.merged(r.counters)
+        return total
+
+    def summary(self) -> Dict[str, float]:
+        total = self.total_counters()
+        return {
+            "queries": len(self.records),
+            "p50_latency_s": round(self.latency_quantile(0.50), 6),
+            "p95_latency_s": round(self.latency_quantile(0.95), 6),
+            "queue_wait_s": round(sum(r.queue_wait_s for r in self.records), 6),
+            "max_concurrent": self.max_concurrent,
+            "admission_queued": self.admission_queued,
+            # per-record view; the cache's own hit/miss counters (which also
+            # see unfinished queries) are merged in as plan_cache_* keys
+            "queries_plan_cache_hit": sum(
+                1 for r in self.records if r.plan_cache_hit
+            ),
+            "imputations": total.imputations,
+            "impute_batches": total.impute_batches,
+            "impute_cross_hits": total.impute_cross_hits,
+        }

@@ -14,7 +14,7 @@ from repro.core.plan import Aggregate, Query
 from repro.core.predicates import JoinPredicate, SelectionPredicate
 from repro.core.relation import MaskedRelation
 
-__all__ = ["workload", "JOIN_GRAPHS"]
+__all__ = ["workload", "serving_workload", "JOIN_GRAPHS"]
 
 # join graphs per data set (chain joins over shared keys)
 JOIN_GRAPHS: Dict[str, List[Tuple[str, str]]] = {
@@ -116,3 +116,35 @@ def workload(
             aggregate=agg,
         ))
     return queries
+
+
+def serving_workload(
+    dataset: str,
+    tables: Dict[str, MaskedRelation],
+    n_queries: int = 20,
+    n_templates: int = 6,
+    n_tenants: int = 4,
+    skew: float = 1.1,
+    kind: str = "random",
+    seed: int = 0,
+):
+    """Skewed multi-tenant query stream for the QuipService serving layer.
+
+    Yields ``(tenant, Query)`` pairs.  Queries are drawn (with repetition)
+    from a pool of ``n_templates`` templates under a Zipf-like distribution
+    with exponent ``skew`` — hot templates recur, so a serving engine sees
+    plan-cache hits and overlapping imputation requests, the two kinds of
+    cross-query sharing QUIP's serving layer amortizes.  Tenants are drawn
+    uniformly and are labels only (admission/fairness experiments); two
+    tenants issuing the same template share plan and imputation state.
+    """
+    templates = workload(dataset, tables, kind=kind,
+                         n_queries=n_templates, seed=seed)
+    rng = np.random.default_rng(seed + 7)
+    ranks = np.arange(1, n_templates + 1, dtype=np.float64)
+    probs = ranks ** -float(skew)
+    probs /= probs.sum()
+    for _ in range(n_queries):
+        t_idx = int(rng.choice(n_templates, p=probs))
+        tenant = int(rng.integers(0, n_tenants))
+        yield tenant, templates[t_idx]

@@ -1,4 +1,9 @@
-from repro.imputers.base import ImputationEngine, ImputationService, Imputer
+from repro.imputers.base import (
+    ImputationEngine,
+    ImputationService,
+    Imputer,
+    ImputeStore,
+)
 from repro.imputers.mean import MeanImputer
 from repro.imputers.knn import KnnImputer
 from repro.imputers.gbdt import GbdtImputer
@@ -8,6 +13,7 @@ __all__ = [
     "ImputationEngine",
     "ImputationService",
     "Imputer",
+    "ImputeStore",
     "MeanImputer",
     "KnnImputer",
     "GbdtImputer",

@@ -21,6 +21,12 @@ this is what makes snapshot writeback consistent.
 ``cost_per_value`` lets benchmarks model expensive imputers (KNN inference,
 LOCATER) without wall-clock sleeps: simulated seconds flow into both the
 decision-function statistics and the reported runtimes.
+
+The dense caches and fitted models live in an :class:`ImputeStore`.  Each
+service creates a private store by default (per-query isolation — seed
+semantics); the serving layer (``repro.service``) injects one shared store
+into many per-query services so values imputed by query A are visible to
+query B (see ``docs/serving.md`` for the consistency argument).
 """
 
 from __future__ import annotations
@@ -34,7 +40,7 @@ import numpy as np
 from repro.core.relation import MaskedRelation
 from repro.core.stats import ExecutionCounters, RuntimeStats
 
-__all__ = ["Imputer", "ImputationService", "ImputationEngine"]
+__all__ = ["Imputer", "ImputeStore", "ImputationService", "ImputationEngine"]
 
 
 class Imputer:
@@ -66,6 +72,117 @@ def _resolve_batching(batching: Optional[bool]) -> bool:
     return os.environ.get("QUIP_IMPUTE_BATCH", "1") != "0"
 
 
+class ImputeStore:
+    """Dense imputation state, extracted from the service so it can outlive
+    (and be shared between) queries.
+
+    Owns, per ``(table, attr)``: the float64 value column, the filled
+    bitmask, the fitted model, and — when ``track_owners`` — an int32 array
+    recording which service (``owner_id``) filled each cell, the basis of
+    the serving layer's cross-query-hit telemetry.  By default every
+    :class:`ImputationService` creates a private store (per-query isolation,
+    seed semantics); ``repro.service.impute_store.SharedImputeStore`` binds
+    one store to many per-query services.
+
+    Flush discipline: the store is written only inside
+    ``ImputationService.flush``, and the serving scheduler interleaves
+    executors at morsel granularity — every enqueue→flush→lookup sequence
+    runs within one scheduler step, so store writes are serialized.  The
+    ``begin_flush``/``end_flush`` guard turns any violation of that
+    discipline (a reentrant or genuinely concurrent flush) into a loud
+    error instead of a silent lost update.
+    """
+
+    def __init__(self, tables: Dict[str, MaskedRelation],
+                 track_owners: bool = False):
+        self.tables = tables
+        self.track_owners = bool(track_owners)
+        self._values: Dict[Tuple[str, str], np.ndarray] = {}
+        self._filled: Dict[Tuple[str, str], np.ndarray] = {}
+        self._owner: Dict[Tuple[str, str], np.ndarray] = {}
+        self._models: Dict[Tuple[str, str], Imputer] = {}
+        self._fitted: set = set()
+        self._in_flush = False
+
+    # -- column caches ----------------------------------------------------#
+    def column_cache(self, table: str, attr: str
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        key = (table, attr)
+        if key not in self._values:
+            n = self.tables[table].num_rows
+            self._values[key] = np.zeros(n, dtype=np.float64)
+            self._filled[key] = np.zeros(n, dtype=bool)
+            if self.track_owners:
+                self._owner[key] = np.full(n, -1, dtype=np.int32)
+        return self._values[key], self._filled[key]
+
+    def owners(self, table: str, attr: str) -> Optional[np.ndarray]:
+        return self._owner.get((table, attr))
+
+    def fill(self, table: str, attr: str, tids: np.ndarray,
+             values: np.ndarray, owner_id: int) -> None:
+        vals, filled = self.column_cache(table, attr)
+        vals[tids] = values
+        filled[tids] = True
+        if self.track_owners:
+            self._owner[(table, attr)][tids] = owner_id
+
+    def filled_cells(self) -> int:
+        """Total imputed cells in the store (serving telemetry)."""
+        return int(sum(m.sum() for m in self._filled.values()))
+
+    def snapshot_tids(self, table: Optional[str] = None
+                      ) -> Dict[Tuple[str, str], np.ndarray]:
+        """Filled base-row ids per ``(table, attr)`` (uncast values live in
+        the dense cache; callers cast via the service)."""
+        out: Dict[Tuple[str, str], np.ndarray] = {}
+        for (t, a), filled in self._filled.items():
+            if table is not None and t != table:
+                continue
+            tids = np.nonzero(filled)[0].astype(np.int64)
+            if len(tids):
+                out[(t, a)] = tids
+        return out
+
+    def values_at(self, table: str, attr: str, tids: np.ndarray) -> np.ndarray:
+        return self._values[(table, attr)][tids]
+
+    # -- flush guard ------------------------------------------------------#
+    def begin_flush(self) -> None:
+        if self._in_flush:
+            raise RuntimeError(
+                "concurrent/reentrant flush against a shared ImputeStore — "
+                "flushes must be serialized (one scheduler step at a time)"
+            )
+        self._in_flush = True
+
+    def end_flush(self) -> None:
+        self._in_flush = False
+
+    # -- model registry ---------------------------------------------------#
+    def model_for(self, table: str, attr: str,
+                  default: Callable[[], "Imputer"],
+                  per_attr: Dict[str, "Imputer"]
+                  ) -> Tuple["Imputer", Optional[float]]:
+        """Fitted model for ``table.attr``; returns ``(model, train_wall)``
+        where ``train_wall`` is the fit's wall seconds on the call that
+        trained it and ``None`` otherwise (the caller charges training cost
+        to its own query's counters — under a shared store only the first
+        query pays)."""
+        key = (table, attr)
+        if key not in self._models:
+            self._models[key] = per_attr.get(attr) or default()
+        model = self._models[key]
+        fit_key = (table, id(model))
+        train_wall: Optional[float] = None
+        if fit_key not in self._fitted:
+            t0 = time.perf_counter()
+            model.fit(self.tables[table])
+            train_wall = time.perf_counter() - t0
+            self._fitted.add(fit_key)
+        return model, train_wall
+
+
 class ImputationService:
     """Columnar, request-queued imputation engine.
 
@@ -94,47 +211,37 @@ class ImputationService:
         stats: Optional[RuntimeStats] = None,
         counters: Optional[ExecutionCounters] = None,
         batching: Optional[bool] = None,
+        store: Optional[ImputeStore] = None,
+        owner_id: int = 0,
     ):
-        self.tables = tables
+        # with an injected (shared) store, all dense state lives there and
+        # ``tables`` must be the store's registry for tids to line up
+        self.store = store if store is not None else ImputeStore(tables)
+        self.tables = self.store.tables if store is not None else tables
+        self.owner_id = int(owner_id)
         self._default = default
         self._per_attr = dict(per_attr or {})
         self.stats = stats or RuntimeStats()
         self.counters = counters or ExecutionCounters()
         self.batching = _resolve_batching(batching)
-        self._models: Dict[Tuple[str, str], Imputer] = {}
-        self._fitted: set = set()
-        # dense per-(table, attr) column caches: float64 values + filled mask
-        self._values: Dict[Tuple[str, str], np.ndarray] = {}
-        self._filled: Dict[Tuple[str, str], np.ndarray] = {}
         # request queue: (table, attr) -> list of enqueued tid arrays
+        # (always per-service — only flushed results land in the store)
         self._queue: Dict[Tuple[str, str], List[np.ndarray]] = {}
         self.simulated_seconds: float = 0.0
 
     # ------------------------------------------------------------------ #
     def _model_for(self, table: str, attr: str) -> Imputer:
-        key = (table, attr)
-        if key not in self._models:
-            self._models[key] = self._per_attr.get(attr) or self._default()
-        model = self._models[key]
-        fit_key = (table, id(model))
-        if fit_key not in self._fitted:
-            t0 = time.perf_counter()
-            model.fit(self.tables[table])
-            train_wall = time.perf_counter() - t0
-            self._fitted.add(fit_key)
-            if model.blocking:
-                self.simulated_seconds += model.train_cost
-                self.counters.imputation_seconds += train_wall + model.train_cost
+        model, train_wall = self.store.model_for(
+            table, attr, self._default, self._per_attr
+        )
+        if train_wall is not None and model.blocking:
+            self.simulated_seconds += model.train_cost
+            self.counters.imputation_seconds += train_wall + model.train_cost
         return model
 
     def _column_cache(self, table: str, attr: str
                       ) -> Tuple[np.ndarray, np.ndarray]:
-        key = (table, attr)
-        if key not in self._values:
-            n = self.tables[table].num_rows
-            self._values[key] = np.zeros(n, dtype=np.float64)
-            self._filled[key] = np.zeros(n, dtype=bool)
-        return self._values[key], self._filled[key]
+        return self.store.column_cache(table, attr)
 
     def _cast(self, table: str, attr: str, values: np.ndarray) -> np.ndarray:
         dtype = self.tables[table].cols[attr].dtype
@@ -166,35 +273,47 @@ class ImputationService:
 
     def flush(self) -> None:
         """Coalesce the queue: per (table, attr), one deduplicated batch
-        through the model; results land in the dense column cache."""
+        through the model; results land in the dense column cache (the
+        service's private store, or an injected shared one)."""
         if not self._queue:
             return
         queue, self._queue = self._queue, {}
         self.counters.impute_flushes += 1
-        for (table, attr), parts in queue.items():
-            tids = parts[0] if len(parts) == 1 else np.concatenate(parts)
-            requested = len(tids)
-            values, filled = self._column_cache(table, attr)
-            uniq = np.unique(tids)  # vectorized dedup (sorted, unique)
-            todo = uniq[~filled[uniq]]
-            if len(todo) == 0:
-                continue
-            model = self._model_for(table, attr)
-            t0 = time.perf_counter()
-            vals = np.asarray(
-                model.impute_attr(self.tables[table], attr, todo),
-                dtype=np.float64,
-            )
-            wall = time.perf_counter() - t0
-            sim = model.cost_per_value * len(todo)
-            self.simulated_seconds += sim
-            self.counters.imputations += len(todo)
-            self.counters.impute_batches += 1
-            self.counters.imputation_seconds += wall + sim
-            self.stats.record_imputation(attr, len(todo), wall + sim)
-            self.stats.record_flush(attr, requested, len(todo))
-            values[todo] = vals
-            filled[todo] = True
+        self.store.begin_flush()
+        try:
+            for (table, attr), parts in queue.items():
+                tids = parts[0] if len(parts) == 1 else np.concatenate(parts)
+                requested = len(tids)
+                values, filled = self._column_cache(table, attr)
+                uniq = np.unique(tids)  # vectorized dedup (sorted, unique)
+                hit_mask = filled[uniq]
+                todo = uniq[~hit_mask]
+                owners = self.store.owners(table, attr)
+                if owners is not None and hit_mask.any():
+                    # cells another query already paid for (serving telemetry)
+                    hits = uniq[hit_mask]
+                    self.counters.impute_cross_hits += int(
+                        (owners[hits] != self.owner_id).sum()
+                    )
+                if len(todo) == 0:
+                    continue
+                model = self._model_for(table, attr)
+                t0 = time.perf_counter()
+                vals = np.asarray(
+                    model.impute_attr(self.tables[table], attr, todo),
+                    dtype=np.float64,
+                )
+                wall = time.perf_counter() - t0
+                sim = model.cost_per_value * len(todo)
+                self.simulated_seconds += sim
+                self.counters.imputations += len(todo)
+                self.counters.impute_batches += 1
+                self.counters.imputation_seconds += wall + sim
+                self.stats.record_imputation(attr, len(todo), wall + sim)
+                self.stats.record_flush(attr, requested, len(todo))
+                self.store.fill(table, attr, todo, vals, self.owner_id)
+        finally:
+            self.store.end_flush()
 
     def lookup(self, table: str, attr: str, tids: np.ndarray) -> np.ndarray:
         """Cached values for ``tids`` (all must have been flushed)."""
@@ -220,19 +339,23 @@ class ImputationService:
     def writeback_snapshot(
         self, table: Optional[str] = None
     ) -> Dict[Tuple[str, str], Tuple[np.ndarray, np.ndarray]]:
-        """Every imputed cell so far: ``{(table, attr): (tids, values)}``.
+        """Every imputed cell in this service's store:
+        ``{(table, attr): (tids, values)}``.
 
         Values are dtype-cast exactly as ``lookup`` returns them, so a
         caller materializing them into base tables observes the same values
         every pipeline copy saw — the consistency guarantee of the dedup
-        cache, preserved across the batched refactor."""
+        cache, preserved across the batched refactor.  With a private store
+        (the default) that is exactly this query's imputations; bound to a
+        shared store it is the *store-wide* snapshot — cells other queries
+        paid for included, which is sound because imputers are
+        deterministic over the immutable registry (every query would have
+        computed identical values; see docs/serving.md)."""
         out: Dict[Tuple[str, str], Tuple[np.ndarray, np.ndarray]] = {}
-        for (t, a), filled in self._filled.items():
-            if table is not None and t != table:
-                continue
-            tids = np.nonzero(filled)[0].astype(np.int64)
-            if len(tids):
-                out[(t, a)] = (tids, self._cast(t, a, self._values[(t, a)][tids]))
+        for (t, a), tids in self.store.snapshot_tids(table).items():
+            out[(t, a)] = (
+                tids, self._cast(t, a, self.store.values_at(t, a, tids))
+            )
         return out
 
     # ------------------------------------------------------------------ #

@@ -1,0 +1,26 @@
+"""QuipService — the concurrent query-serving subsystem.
+
+Layers (see docs/serving.md):
+
+* :mod:`repro.service.server`       — submit/poll/result API + admission
+* :mod:`repro.service.scheduler`    — round-robin morsel interleaver
+* :mod:`repro.service.session`      — per-query state machine
+* :mod:`repro.service.plan_cache`   — LRU plan cache (canonical signatures)
+* :mod:`repro.service.impute_store` — cross-query imputation sharing
+"""
+
+from repro.service.impute_store import SharedImputeStore, resolve_shared_impute
+from repro.service.plan_cache import PlanCache, query_signature
+from repro.service.scheduler import MorselScheduler
+from repro.service.server import QuipService
+from repro.service.session import QuerySession
+
+__all__ = [
+    "QuipService",
+    "QuerySession",
+    "MorselScheduler",
+    "PlanCache",
+    "query_signature",
+    "SharedImputeStore",
+    "resolve_shared_impute",
+]

@@ -1,0 +1,82 @@
+"""Cross-query imputation sharing: one ImputeStore for many query sessions.
+
+The PR-2 ImputationService already guarantees that within ONE query the
+same missing cell is computed once no matter how many pipeline copies touch
+it.  :class:`SharedImputeStore` lifts that guarantee across queries: every
+per-query service binds to the same dense value/filled caches and the same
+fitted models, so a value query A paid for is a cache hit for query B and
+a blocking imputer (GBDT, KNN reference matrix) trains once per table
+instead of once per query.
+
+Consistency argument (docs/serving.md expands on this):
+
+* base tables in the registry are immutable while the service is up;
+* imputers are deterministic functions of (base table, attr, tid) once
+  fitted, and fitting is itself a deterministic function of the base table;
+* therefore every query — shared store or not — would compute the *same*
+  value for a given cell, and sharing changes only *who computes it first*.
+  Answers are bit-identical to per-query isolation; only the invocation
+  counters shrink.  The equivalence tests in tests/test_service.py assert
+  exactly this.
+
+Flush discipline: the serving scheduler interleaves executors at morsel
+granularity on one thread, and every enqueue→flush→lookup sequence happens
+within a single scheduler step, so store writes never interleave.  The
+store's ``begin_flush`` guard enforces this (a reentrant flush raises).
+
+Gating: per-query isolation is the safe default; sharing is enabled by
+constructing QuipService with ``shared_impute=True`` or by setting
+``QUIP_SHARED_IMPUTE=1``.
+"""
+
+from __future__ import annotations
+
+import itertools
+import os
+from typing import Callable, Dict, Optional
+
+from repro.core.relation import MaskedRelation
+from repro.core.stats import ExecutionCounters, RuntimeStats
+from repro.imputers.base import ImputationService, Imputer, ImputeStore
+
+__all__ = ["SharedImputeStore", "resolve_shared_impute"]
+
+
+def resolve_shared_impute(shared: Optional[bool]) -> bool:
+    """Explicit argument > ``QUIP_SHARED_IMPUTE`` env ("1" enables) > off."""
+    if shared is not None:
+        return bool(shared)
+    return os.environ.get("QUIP_SHARED_IMPUTE", "0") == "1"
+
+
+class SharedImputeStore(ImputeStore):
+    """An :class:`ImputeStore` shared by many per-query services.
+
+    Tracks per-cell ownership (which query filled it) so services can count
+    cross-query hits, and hands each bound service a distinct ``owner_id``.
+    """
+
+    def __init__(self, tables: Dict[str, MaskedRelation]):
+        super().__init__(tables, track_owners=True)
+        self._owner_ids = itertools.count(1)
+
+    def bind(
+        self,
+        default: Callable[[], Imputer],
+        per_attr: Optional[Dict[str, Imputer]] = None,
+        stats: Optional[RuntimeStats] = None,
+        counters: Optional[ExecutionCounters] = None,
+        batching: Optional[bool] = None,
+    ) -> ImputationService:
+        """A fresh per-query service (own queue, counters, stats) backed by
+        this store's caches and models."""
+        return ImputationService(
+            self.tables,
+            default=default,
+            per_attr=per_attr,
+            stats=stats,
+            counters=counters,
+            batching=batching,
+            store=self,
+            owner_id=next(self._owner_ids),
+        )

@@ -1,0 +1,91 @@
+"""LRU plan cache keyed on a canonical query signature.
+
+Planning a query is not free — ``make_plan`` scans every base table for
+selectivity statistics before the ImputeDB-style join ordering runs.  A
+serving workload repeats query shapes (the skew the paper's multi-tenant
+scenario assumes), so QuipService interns the *pre-rewrite* SPJ plan per
+signature and hands each execution a structural clone: executors mutate
+plan nodes (ρ wrapping reassigns parents, VF-list construction rewrites
+verify/filter sets), so the cached tree itself must stay pristine.
+
+The signature canonicalizes everything the planner looks at — tables,
+selections (``in``-sets sorted), joins, projection, aggregate, planner
+name.  It deliberately does *not* hash table contents: the registry is
+immutable while a service is up, and invalidation-on-mutation is an open
+item (see ROADMAP).
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Dict, Optional, Tuple
+
+from repro.core.executor import make_plan
+from repro.core.plan import PlanNode, Query, clone_plan
+from repro.core.relation import MaskedRelation
+
+__all__ = ["PlanCache", "query_signature"]
+
+
+def _canonical_value(value) -> object:
+    if isinstance(value, frozenset):
+        return tuple(sorted(value))
+    return value
+
+
+def query_signature(query: Query, planner: str = "imputedb") -> Tuple:
+    """Hashable canonical form of everything the planner consumes."""
+    sels = tuple(
+        (p.attr, p.op, _canonical_value(p.value)) for p in query.selections
+    )
+    joins = tuple((j.left_attr, j.right_attr) for j in query.joins)
+    agg = (
+        (query.aggregate.op, query.aggregate.attr, query.aggregate.group_by)
+        if query.aggregate is not None
+        else None
+    )
+    return (planner, tuple(query.tables), sels, joins,
+            tuple(query.projection), agg)
+
+
+class PlanCache:
+    """LRU over ``query_signature`` → pristine SPJ plan, with hit/miss
+    counters.  ``get`` always returns a fresh :func:`clone_plan` copy."""
+
+    def __init__(self, capacity: int = 64, planner: str = "imputedb"):
+        assert capacity >= 1
+        self.capacity = int(capacity)
+        self.planner = planner
+        self._plans: "OrderedDict[Tuple, PlanNode]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    def get(self, query: Query, tables: Dict[str, MaskedRelation],
+            planner: Optional[str] = None) -> Tuple[PlanNode, bool]:
+        """Returns ``(plan, hit)``; plans the query on a miss."""
+        planner = planner or self.planner
+        sig = query_signature(query, planner)
+        cached = self._plans.get(sig)
+        if cached is not None:
+            self._plans.move_to_end(sig)
+            self.hits += 1
+            return clone_plan(cached), True
+        plan = make_plan(query, tables, planner=planner)
+        self._plans[sig] = plan
+        while len(self._plans) > self.capacity:
+            self._plans.popitem(last=False)
+            self.evictions += 1
+        self.misses += 1
+        return clone_plan(plan), False
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "size": len(self._plans),
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+        }

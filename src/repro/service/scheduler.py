@@ -1,0 +1,58 @@
+"""Round-robin morsel-interleaving scheduler.
+
+Runs many QuipExecutor pipelines as coroutines on one thread: each
+scheduler step advances exactly one session by one top-level morsel
+(``QuipExecutor.steps()``), then rotates.  A query stuck in a long
+ρ-fixpoint only occupies its own step — queued neighbors keep streaming
+between its morsels, so one slow query cannot head-of-line-block the
+admission queue.  Generator stepping also serializes every
+enqueue→flush→lookup sequence, which is what makes the shared ImputeStore
+safe without locks (see service/impute_store.py).
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, List, Optional
+
+from repro.service.session import RUNNING, QuerySession
+
+__all__ = ["MorselScheduler"]
+
+
+class MorselScheduler:
+    def __init__(self):
+        self._ring: Deque[QuerySession] = deque()
+
+    @property
+    def running(self) -> int:
+        return len(self._ring)
+
+    def sessions(self) -> List[QuerySession]:
+        return list(self._ring)
+
+    def add(self, session: QuerySession) -> None:
+        session.start()
+        if session.state == RUNNING:
+            self._ring.append(session)
+
+    def step(self) -> Optional[QuerySession]:
+        """Advance the head session one morsel.  Returns the session if it
+        finished (done or failed) on this step, else None."""
+        if not self._ring:
+            return None
+        session = self._ring.popleft()
+        if session.step():
+            return session
+        self._ring.append(session)
+        return None
+
+    def drain(self) -> List[QuerySession]:
+        """Step until every running session finishes; returns them in
+        completion order."""
+        finished: List[QuerySession] = []
+        while self._ring:
+            done = self.step()
+            if done is not None:
+                finished.append(done)
+        return finished

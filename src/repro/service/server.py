@@ -1,0 +1,383 @@
+"""QuipService: concurrent query serving with shared state.
+
+The serving layer the ROADMAP's "heavy traffic" north star needs on top of
+the single-query engine: a submit/poll/result API over a shared table
+registry, admission control with a configurable in-flight limit, a
+round-robin morsel-interleaving scheduler, an LRU plan cache, and (gated)
+cross-query imputation sharing.
+
+::
+
+    service = QuipService(tables, imputer_factory, max_inflight=4,
+                          shared_impute=True)
+    t1 = service.submit(q1); t2 = service.submit(q2, tenant=7)
+    service.run_until_idle()
+    res = service.result(t1)           # ExecutionResult
+    print(service.summary())           # serving_* telemetry
+
+Compound (§9.3) queries route through sessions too: ``submit_union`` /
+``submit_minus`` submit both branches concurrently, ``submit_nested`` runs
+the subquery session first and submits the rewritten outer query when it
+completes; ``result`` on a compound ticket returns ``(answers, stats)``
+with the branches' full merged counters, exactly like
+``repro.core.extensions``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+from repro.core.executor import ExecutionResult
+from repro.core.extensions import (
+    merge_stats,
+    minus_answers,
+    nested_outer_query,
+    union_answers,
+)
+from repro.core.plan import Query
+from repro.core.relation import MaskedRelation
+from repro.core.stats import QueryRecord, ServingStats
+from repro.imputers.base import ImputationService, Imputer
+from repro.service.impute_store import SharedImputeStore, resolve_shared_impute
+from repro.service.plan_cache import PlanCache
+from repro.service.scheduler import MorselScheduler
+from repro.service.session import DONE, FAILED, QUEUED, RUNNING, QuerySession
+
+__all__ = ["QuipService"]
+
+
+@dataclasses.dataclass
+class _Compound:
+    """A §9.3 compound query tracked across its branch sessions."""
+
+    kind: str  # "union" | "minus" | "nested"
+    tickets: List[int]  # branch tickets, in combination order
+    # nested only: the outer query awaiting the subquery's result
+    outer: Optional[Query] = None
+    in_attr: Optional[str] = None
+    strategy: Optional[str] = None
+    tenant: Optional[int] = None
+    result: Optional[Tuple[List[tuple], Dict]] = None
+
+
+class QuipService:
+    """Concurrent query-serving engine over a fixed table registry.
+
+    ``tables`` is treated as immutable while the service is up (the plan
+    cache and the shared imputation store both key off its contents);
+    mutation invalidation is an open ROADMAP item.
+    """
+
+    def __init__(
+        self,
+        tables: Dict[str, MaskedRelation],
+        imputer_factory: Callable[[], Imputer],
+        per_attr: Optional[Dict[str, Imputer]] = None,
+        *,
+        max_inflight: int = 4,
+        plan_cache_size: int = 64,
+        shared_impute: Optional[bool] = None,
+        strategy: str = "adaptive",
+        planner: str = "imputedb",
+        morsel_rows: int = 8192,
+        bloom_impl: Optional[str] = None,
+        join_impl: Optional[str] = None,
+        minmax_opt: bool = True,
+        use_vf: bool = True,
+    ):
+        assert max_inflight >= 1
+        self.tables = tables
+        self._factory = imputer_factory
+        self._per_attr = dict(per_attr or {})
+        self.max_inflight = int(max_inflight)
+        self.default_strategy = strategy
+        self.shared_impute = resolve_shared_impute(shared_impute)
+        self.store: Optional[SharedImputeStore] = (
+            SharedImputeStore(tables) if self.shared_impute else None
+        )
+        self.plan_cache = PlanCache(plan_cache_size, planner=planner)
+        self.scheduler = MorselScheduler()
+        self.serving = ServingStats()
+        self._exec_kwargs = {
+            "morsel_rows": morsel_rows,
+            "bloom_impl": bloom_impl,
+            "join_impl": join_impl,
+            "minmax_opt": minmax_opt,
+            "use_vf": use_vf,
+        }
+        self._tickets = itertools.count(1)
+        self._sessions: Dict[int, QuerySession] = {}
+        self._waiting: Deque[QuerySession] = deque()
+        self._compounds: Dict[int, _Compound] = {}
+        self._pending_compounds: set = set()  # unresolved tickets (step scan)
+
+    # ------------------------------------------------------------------ #
+    # per-query resources
+    # ------------------------------------------------------------------ #
+    def _make_engine(self, tables: Dict[str, MaskedRelation]
+                     ) -> ImputationService:
+        if self.store is not None:
+            return self.store.bind(self._factory, self._per_attr)
+        # isolation (safe default): a cold engine per query, exactly the
+        # serial-replay construction — equivalence is trivial by design.
+        # The engine only reads its tables, so it shares the session's
+        # copies rather than paying a second copy per query.
+        return ImputationService(
+            tables, default=self._factory, per_attr=self._per_attr
+        )
+
+    # ------------------------------------------------------------------ #
+    # submit / poll / result
+    # ------------------------------------------------------------------ #
+    def _session_setup(self, query: Query, strategy: str):
+        """Materialize a session's resources — runs at admission, so a deep
+        waiting queue holds no table copies and the latency clock covers
+        planning the same way a cold serial run does."""
+        if strategy == "offline":
+            # the offline baseline never consults a plan — don't pay for
+            # (or skew the telemetry of) planning it
+            plan, hit = None, False
+        else:
+            plan, hit = self.plan_cache.get(query, self.tables)
+        tables = {t: self.tables[t].copy() for t in query.tables}
+        engine = self._make_engine(tables)
+        return plan, engine, tables, hit
+
+    def submit(self, query: Query, *, strategy: Optional[str] = None,
+               tenant: Optional[int] = None) -> int:
+        """Enqueue a query; returns its ticket.  Admission is immediate when
+        fewer than ``max_inflight`` sessions are running, else the session
+        waits in FIFO order."""
+        strategy = strategy or self.default_strategy
+        session = QuerySession(
+            ticket=next(self._tickets),
+            query=query,
+            strategy=strategy,
+            setup=lambda: self._session_setup(query, strategy),
+            tenant=tenant,
+            exec_kwargs=self._exec_kwargs,
+        )
+        self._sessions[session.ticket] = session
+        if self.scheduler.running >= self.max_inflight:
+            self.serving.admission_queued += 1
+        self._waiting.append(session)
+        self._admit()
+        return session.ticket
+
+    def poll(self, ticket: int) -> str:
+        """State of a plain or compound ticket:
+        queued | running | done | failed."""
+        comp = self._compounds.get(ticket)
+        if comp is not None:
+            if comp.result is not None:
+                return DONE
+            branches = [self._sessions[t].state for t in comp.tickets]
+            if FAILED in branches:
+                return FAILED
+            if all(s == QUEUED for s in branches):
+                return QUEUED
+            return RUNNING
+        return self._sessions[ticket].state
+
+    def step(self) -> bool:
+        """One scheduler tick (one morsel of one session) plus any admission
+        and compound resolution it unlocks.  Returns True if work remains."""
+        finished = self.scheduler.step()
+        if finished is not None:
+            self._finalize(finished)
+        self._admit()
+        self._resolve_compounds()
+        return bool(self.scheduler.running or self._waiting)
+
+    def run_until_idle(self) -> None:
+        while self.step():
+            pass
+
+    def result(self, ticket: int):
+        """Block (by driving the scheduler) until ``ticket`` finishes.
+
+        Plain tickets return the :class:`ExecutionResult`; compound tickets
+        return ``(answers, stats)`` (see ``submit_union`` etc.)."""
+        if ticket in self._compounds:
+            return self._compound_result(ticket)
+        session = self._sessions[ticket]
+        while session.state in (QUEUED, RUNNING):
+            if not self.step():
+                break
+        if session.state == FAILED:
+            raise session.error
+        assert session.state == DONE, session.state
+        return session.result
+
+    def answers(self, ticket: int) -> List[tuple]:
+        """Answer tuples of a plain or compound ticket (drives the
+        scheduler to completion like :meth:`result`)."""
+        if ticket in self._compounds:
+            answers, _stats = self.result(ticket)
+            return answers
+        return self.result(ticket).answer_tuples()
+
+    def release(self, ticket: int) -> None:
+        """Drop a finished ticket's retained result.
+
+        Sessions keep their :class:`ExecutionResult` (the materialized
+        answer relation) until released so ``result``/``answers`` stay
+        idempotent; a long-lived service under sustained traffic should
+        release tickets once consumed.  Telemetry (``serving.records``)
+        is unaffected.  Compound release also drops the branch sessions."""
+        comp = self._compounds.get(ticket)
+        if comp is not None:
+            branch_states = [self._sessions[t].state for t in comp.tickets]
+            assert comp.result is not None or FAILED in branch_states, (
+                f"release of unfinished compound ticket {ticket}"
+            )
+            del self._compounds[ticket]
+            self._pending_compounds.discard(ticket)
+            for t in comp.tickets:
+                self.release(t)
+            return
+        session = self._sessions[ticket]
+        assert session.state in (DONE, FAILED), (
+            f"release of unfinished ticket {ticket} ({session.state})"
+        )
+        del self._sessions[ticket]
+
+    # ------------------------------------------------------------------ #
+    # compound (§9.3) queries — routed through sessions
+    # ------------------------------------------------------------------ #
+    def submit_union(self, left: Query, right: Query, *,
+                     strategy: Optional[str] = None,
+                     tenant: Optional[int] = None) -> int:
+        return self._submit_compound("union", left, right,
+                                     strategy=strategy, tenant=tenant)
+
+    def submit_minus(self, left: Query, right: Query, *,
+                     strategy: Optional[str] = None,
+                     tenant: Optional[int] = None) -> int:
+        return self._submit_compound("minus", left, right,
+                                     strategy=strategy, tenant=tenant)
+
+    def submit_nested(self, outer: Query, in_attr: str, sub: Query, *,
+                      strategy: Optional[str] = None,
+                      tenant: Optional[int] = None) -> int:
+        """Outer query with ``in_attr IN (sub)``: the subquery session runs
+        first (blocking subtree); the rewritten outer query is submitted the
+        moment it completes."""
+        sub_ticket = self.submit(sub, strategy=strategy, tenant=tenant)
+        ticket = next(self._tickets)
+        self._compounds[ticket] = _Compound(
+            kind="nested", tickets=[sub_ticket], outer=outer, in_attr=in_attr,
+            strategy=strategy, tenant=tenant,
+        )
+        self._pending_compounds.add(ticket)
+        return ticket
+
+    def _submit_compound(self, kind: str, left: Query, right: Query, *,
+                         strategy: Optional[str], tenant: Optional[int]) -> int:
+        lt = self.submit(left, strategy=strategy, tenant=tenant)
+        rt = self.submit(right, strategy=strategy, tenant=tenant)
+        ticket = next(self._tickets)
+        self._compounds[ticket] = _Compound(kind=kind, tickets=[lt, rt])
+        self._pending_compounds.add(ticket)
+        return ticket
+
+    def _resolve_compounds(self) -> None:
+        for ticket in list(self._pending_compounds):
+            comp = self._compounds[ticket]
+            if comp.result is not None:
+                self._pending_compounds.discard(ticket)
+                continue
+            if any(self._sessions[t].state == FAILED for t in comp.tickets):
+                # never resolvable — stop rescanning it every step; the
+                # branch error surfaces via result()/poll()
+                self._pending_compounds.discard(ticket)
+                continue
+            if comp.kind == "nested" and comp.outer is not None:
+                sub = self._sessions[comp.tickets[0]]
+                if sub.state == DONE:
+                    outer2 = nested_outer_query(
+                        comp.outer, comp.in_attr, sub.result
+                    )
+                    comp.tickets.append(self.submit(
+                        outer2, strategy=comp.strategy, tenant=comp.tenant
+                    ))
+                    comp.outer = None  # outer submitted; await its session
+                continue
+            sessions = [self._sessions[t] for t in comp.tickets]
+            if comp.kind != "nested" and len(sessions) < 2:
+                continue
+            if all(s.state == DONE for s in sessions):
+                comp.result = self._combine(comp, sessions)
+                self._pending_compounds.discard(ticket)
+
+    def _combine(self, comp: _Compound, sessions: List[QuerySession]
+                 ) -> Tuple[List[tuple], Dict]:
+        stats = merge_stats(*(s.result.counters for s in sessions))
+        if comp.kind == "union":
+            answers = union_answers(sessions[0].result.answer_tuples(),
+                                    sessions[1].result.answer_tuples())
+        elif comp.kind == "minus":
+            answers = minus_answers(sessions[0].result.answer_tuples(),
+                                    sessions[1].result.answer_tuples())
+        else:  # nested: the outer session's answer is the result
+            answers = sessions[-1].result.answer_tuples()
+        return answers, stats
+
+    def _compound_result(self, ticket: int) -> Tuple[List[tuple], Dict]:
+        comp = self._compounds[ticket]
+        while comp.result is None:
+            for t in comp.tickets:
+                if self._sessions[t].state == FAILED:
+                    raise self._sessions[t].error
+            if not self.step():
+                self._resolve_compounds()
+                if comp.result is None:
+                    for t in comp.tickets:
+                        if self._sessions[t].state == FAILED:
+                            raise self._sessions[t].error
+                    raise RuntimeError("compound query stuck (branch failed?)")
+        return comp.result
+
+    # ------------------------------------------------------------------ #
+    # admission + finalization
+    # ------------------------------------------------------------------ #
+    def _admit(self) -> None:
+        while self._waiting and self.scheduler.running < self.max_inflight:
+            session = self._waiting.popleft()
+            self.scheduler.add(session)
+            if session.state == FAILED:
+                self._finalize(session)
+        self.serving.observe_concurrency(self.scheduler.running)
+
+    def _finalize(self, session: QuerySession) -> None:
+        if session.state == DONE:
+            self.serving.record_query(QueryRecord(
+                ticket=session.ticket,
+                tenant=session.tenant,
+                strategy=session.strategy,
+                queue_wait_s=session.queue_wait_s,
+                latency_s=session.latency_s,
+                plan_cache_hit=session.plan_cache_hit,
+                counters=session.result.counters,
+            ))
+        # only the result (and its counters) outlives completion — the
+        # table copies / engine / coroutine are the session's bulk
+        session.release_resources()
+
+    # ------------------------------------------------------------------ #
+    # telemetry
+    # ------------------------------------------------------------------ #
+    def summary(self) -> Dict[str, float]:
+        """Flat ``serving_*``-ready metrics: scheduling, plan cache, and
+        cross-query imputation sharing."""
+        out = self.serving.summary()
+        out.update({
+            f"plan_cache_{k}": v for k, v in self.plan_cache.stats().items()
+        })
+        out["shared_impute"] = int(self.shared_impute)
+        if self.store is not None:
+            out["store_filled_cells"] = self.store.filled_cells()
+        return out

@@ -1,0 +1,150 @@
+"""One submitted query inside QuipService: state machine + step coroutine.
+
+A session owns everything per-query: the table copies its executor scans,
+its ImputationService (possibly store-backed), its plan clone, and the
+``QuipExecutor.steps()`` generator the scheduler advances.  Those
+resources are built lazily by the injected ``setup`` callable at
+*admission* (``start``), not at submission — a deep admission queue must
+not hold table copies, and the latency clock covers planning exactly like
+a cold serial run does.  Lifecycle::
+
+    QUEUED --admit--> RUNNING --steps exhausted--> DONE
+                         \\--exception-----------> FAILED
+
+``strategy="offline"`` runs the offline baseline as a single step (it is a
+blocking whole-table pass by definition — nothing to interleave).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Iterator, Optional, Tuple
+
+from repro.core.executor import (
+    ExecutionResult,
+    QuipExecutor,
+    execute_offline,
+)
+from repro.core.plan import PlanNode, Query
+from repro.core.relation import MaskedRelation
+from repro.imputers.base import ImputationService
+
+__all__ = ["QuerySession", "QUEUED", "RUNNING", "DONE", "FAILED"]
+
+QUEUED, RUNNING, DONE, FAILED = "queued", "running", "done", "failed"
+
+# plan (None for offline), engine, table copies, plan_cache_hit
+SessionSetup = Callable[
+    [], Tuple[Optional[PlanNode], ImputationService,
+              Dict[str, MaskedRelation], bool]
+]
+
+
+class QuerySession:
+    def __init__(
+        self,
+        ticket: int,
+        query: Query,
+        strategy: str,
+        setup: SessionSetup,
+        tenant: Optional[int] = None,
+        exec_kwargs: Optional[Dict] = None,
+    ):
+        self.ticket = ticket
+        self.query = query
+        self.strategy = strategy
+        self.tenant = tenant
+        self._setup = setup
+        self.exec_kwargs = dict(exec_kwargs or {})
+
+        self.plan: Optional[PlanNode] = None
+        self.engine: Optional[ImputationService] = None
+        self.tables: Optional[Dict[str, MaskedRelation]] = None
+        self.plan_cache_hit = False
+
+        self.state = QUEUED
+        self.submitted_at = time.perf_counter()
+        self.started_at: Optional[float] = None
+        self.finished_at: Optional[float] = None
+        self.result: Optional[ExecutionResult] = None
+        self.error: Optional[BaseException] = None
+        self._gen: Optional[Iterator[None]] = None
+        self._executor = None
+
+    # -- timeline ---------------------------------------------------------#
+    @property
+    def queue_wait_s(self) -> float:
+        if self.started_at is None:
+            return 0.0
+        return self.started_at - self.submitted_at
+
+    @property
+    def latency_s(self) -> float:
+        if self.finished_at is None:
+            return 0.0
+        return self.finished_at - self.submitted_at
+
+    # -- lifecycle --------------------------------------------------------#
+    def start(self) -> None:
+        """Admission: materialize resources, build the step coroutine."""
+        assert self.state == QUEUED, self.state
+        self.started_at = time.perf_counter()
+        self.state = RUNNING
+        try:
+            (self.plan, self.engine, self.tables,
+             self.plan_cache_hit) = self._setup()
+            if self.strategy == "offline":
+                self._gen = self._offline_steps()
+            else:
+                executor = QuipExecutor(
+                    self.query,
+                    self.tables,
+                    self.plan,
+                    self.engine,
+                    strategy=self.strategy,
+                    **self.exec_kwargs,
+                )
+                self._executor = executor
+                self._gen = executor.steps()
+        except Exception as e:  # plan/setup errors surface via result()
+            self._fail(e)
+
+    def _offline_steps(self) -> Iterator[None]:
+        self.result = execute_offline(self.query, self.tables, self.engine)
+        return
+        yield  # pragma: no cover - makes this a generator
+
+    def step(self) -> bool:
+        """Advance one morsel; True when the session left RUNNING."""
+        if self.state != RUNNING:
+            return True
+        try:
+            next(self._gen)
+            return False
+        except StopIteration:
+            if self.result is None:
+                self.result = self._executor.result
+            self.state = DONE
+            self.finished_at = time.perf_counter()
+            return True
+        except Exception as e:  # query errors surface via result();
+            self._fail(e)       # KeyboardInterrupt/SystemExit propagate
+            return True
+
+    def _fail(self, error: BaseException) -> None:
+        self.state = FAILED
+        self.error = error
+        self.finished_at = time.perf_counter()
+
+    def release_resources(self) -> None:
+        """Drop per-query execution state once the session has finished.
+
+        The table copies, engine, plan and coroutine are the bulk of a
+        session's footprint; a long-lived service only needs the result
+        (and its counters) after completion."""
+        assert self.state in (DONE, FAILED), self.state
+        self.engine = None
+        self.tables = None
+        self.plan = None
+        self._gen = None
+        self._executor = None

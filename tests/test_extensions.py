@@ -56,6 +56,47 @@ def test_minus_matches_clean(inst):
     assert got == want
 
 
+def test_union_stats_propagate_full_counters(inst):
+    """Compound queries report the branches' full merged ExecutionCounters,
+    not just an imputation total."""
+    tables, _clean, factory = inst
+    _got, stats = execute_union(_q(2), _q(4), tables, factory)
+    for key in ("imputations", "impute_batches", "impute_flushes",
+                "join_impl", "wall_seconds", "temp_tuples"):
+        assert key in stats, key
+    assert stats["imputations"] > 0
+    assert stats["impute_batches"] >= 2  # both branches imputed
+    assert stats["impute_flushes"] > 0
+    assert stats["join_impl"] in ("numpy", "ref", "pallas")
+
+
+def test_empty_in_set_is_always_false():
+    """Satellite regression: an empty IN-set is a proper always-false
+    predicate (the old code used a magic sentinel value and would crash on
+    an empty frozenset)."""
+    pred = SelectionPredicate("R0.v", "in", frozenset())
+    vals = np.array([0, 1, -(2 ** 60), 7])
+    assert not pred.evaluate_values(vals).any()
+    assert pred.evaluate_values(np.array([], dtype=np.int64)).shape == (0,)
+
+
+def test_nested_empty_subquery_result(inst):
+    """Satellite regression: an empty subquery result must yield an empty
+    outer answer (via the always-false predicate path, no sentinels)."""
+    tables, _clean, factory = inst
+    outer = Query(tables=("R0",), selections=(), joins=(),
+                  projection=("R0.v",))
+    sub = Query(
+        tables=("R1",),
+        selections=(SelectionPredicate("R1.v", "<=", -(10 ** 9)),),
+        joins=(),
+        projection=("R1.k1",),
+    )
+    got, stats = execute_nested(outer, "R0.k1", sub, tables, factory)
+    assert got == []
+    assert stats["imputations"] >= 0  # merged counters still reported
+
+
 def test_nested_in_subquery_matches_clean(inst):
     tables, clean, factory = inst
     outer = Query(

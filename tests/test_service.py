@@ -1,0 +1,402 @@
+"""QuipService serving layer: serial-vs-concurrent equivalence, plan-cache
+behavior, cross-query imputation sharing, admission control, compound-query
+routing, and the serving telemetry surface."""
+
+from __future__ import annotations
+
+from collections import Counter
+
+import numpy as np
+import pytest
+
+from repro.core.executor import execute_offline, execute_quip
+from repro.core.plan import Query
+from repro.core.predicates import JoinPredicate, SelectionPredicate
+from repro.imputers.base import ImputationService, Imputer
+from repro.service import (
+    MorselScheduler,
+    PlanCache,
+    QuipService,
+    query_signature,
+    resolve_shared_impute,
+)
+from test_quip_correctness import GroundTruthImputer, _build_instance
+
+STRATEGIES = ["offline", "eager", "lazy", "adaptive"]
+
+
+# --------------------------------------------------------------------------- #
+# harness: an overlapping multi-query workload over one instance
+# --------------------------------------------------------------------------- #
+def _instance(seed=11, rows=64):
+    rng = np.random.default_rng(seed)
+    tables, clean, truth = _build_instance(rng, 2, rows, 0.3, 6)
+    return tables, clean, truth
+
+
+def _query(v, proj=("R0.v", "R1.v")):
+    return Query(
+        tables=("R0", "R1"),
+        selections=(SelectionPredicate("R0.v", "<=", v),),
+        joins=(JoinPredicate("R0.k1", "R1.k1"),),
+        projection=proj,
+    )
+
+
+# hot template repeated (plan-cache hits + imputation overlap) + variations
+WORKLOAD = [_query(2), _query(4), _query(2), _query(3), _query(2)]
+
+
+def _serial_replay(queries, tables, truth, strategy, morsel_rows=8):
+    """The cold-engine baseline: a fresh ImputationService per query."""
+    out = []
+    for q in queries:
+        eng = ImputationService(
+            {t: tables[t].copy() for t in tables},
+            default=lambda: GroundTruthImputer(truth),
+        )
+        if strategy == "offline":
+            out.append(execute_offline(q, tables, eng))
+        else:
+            out.append(execute_quip(q, tables, eng, strategy=strategy,
+                                    morsel_rows=morsel_rows))
+    return out
+
+
+def _service(tables, truth, *, strategy="lazy", shared=False, inflight=3,
+             **kw):
+    return QuipService(
+        tables, lambda: GroundTruthImputer(truth), strategy=strategy,
+        shared_impute=shared, max_inflight=inflight, morsel_rows=8, **kw
+    )
+
+
+# --------------------------------------------------------------------------- #
+# serial vs concurrent equivalence (isolation default)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_serial_vs_concurrent_equivalence(strategy):
+    """Interleaved execution with per-query isolation must match serial
+    replay: same per-query answers and the same total imputed values."""
+    tables, _clean, truth = _instance()
+    serial = _serial_replay(WORKLOAD, tables, truth, strategy)
+    svc = _service(tables, truth, strategy=strategy)
+    tickets = [svc.submit(q) for q in WORKLOAD]
+    svc.run_until_idle()
+    for tk, sr in zip(tickets, serial):
+        assert Counter(svc.answers(tk)) == Counter(sr.answer_tuples())
+    total = svc.serving.total_counters()
+    assert total.imputations == sum(r.counters.imputations for r in serial)
+    assert svc.summary()["queries"] == len(WORKLOAD)
+
+
+# --------------------------------------------------------------------------- #
+# plan cache
+# --------------------------------------------------------------------------- #
+def test_plan_cache_hits_on_repeated_signatures():
+    tables, _clean, truth = _instance()
+    svc = _service(tables, truth)
+    for q in WORKLOAD:
+        svc.submit(q)
+    svc.run_until_idle()
+    # WORKLOAD has 3 distinct signatures (v=2 three times, v=4, v=3)
+    assert svc.plan_cache.misses == 3
+    assert svc.plan_cache.hits == 2
+    assert svc.summary()["plan_cache_hits"] == 2
+
+
+def test_query_signature_canonicalization():
+    q1 = Query(("R0",), (SelectionPredicate("R0.v", "in",
+                                            frozenset({3, 1, 2})),),
+               (), ("R0.v",))
+    q2 = Query(("R0",), (SelectionPredicate("R0.v", "in",
+                                            frozenset({2, 3, 1})),),
+               (), ("R0.v",))
+    q3 = Query(("R0",), (SelectionPredicate("R0.v", "==", 1),), (), ("R0.v",))
+    assert query_signature(q1) == query_signature(q2)
+    assert query_signature(q1) != query_signature(q3)
+    assert query_signature(q1, "naive") != query_signature(q1, "imputedb")
+
+
+def test_plan_cache_lru_eviction():
+    tables, _clean, truth = _instance()
+    cache = PlanCache(capacity=2)
+    qa, qb, qc = _query(1), _query(2), _query(3)
+    for q in (qa, qb, qc):
+        _plan, hit = cache.get(q, tables)
+        assert not hit
+    assert cache.evictions == 1 and len(cache) == 2
+    _plan, hit = cache.get(qc, tables)  # most recent: still cached
+    assert hit
+    _plan, hit = cache.get(qa, tables)  # evicted: re-planned
+    assert not hit
+
+
+def test_cached_plan_is_cloned_per_execution():
+    """Two sessions of the same signature must not share plan nodes — the
+    executor mutates parent pointers and VF lists."""
+    tables, _clean, truth = _instance()
+    cache = PlanCache()
+    p1, _ = cache.get(_query(2), tables)
+    p2, _ = cache.get(_query(2), tables)
+    assert p1 is not p2
+    assert {id(n) for n in _walk(p1)}.isdisjoint({id(n) for n in _walk(p2)})
+
+
+def _walk(node):
+    for c in node.children:
+        yield from _walk(c)
+    yield node
+
+
+# --------------------------------------------------------------------------- #
+# cross-query imputation sharing
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("strategy", ["eager", "lazy"])
+def test_shared_store_reduces_invocations(strategy):
+    """On an overlapping workload the shared store must strictly reduce both
+    imputer invocations and imputed values, with identical answers."""
+    tables, _clean, truth = _instance()
+    results = {}
+    for shared in (False, True):
+        svc = _service(tables, truth, strategy=strategy, shared=shared)
+        tickets = [svc.submit(q) for q in WORKLOAD]
+        svc.run_until_idle()
+        answers = [Counter(svc.answers(t)) for t in tickets]
+        results[shared] = (answers, svc.serving.total_counters())
+    iso_answers, iso = results[False]
+    sh_answers, sh = results[True]
+    assert sh_answers == iso_answers  # bit-identical answers either way
+    assert sh.imputations < iso.imputations
+    assert sh.impute_batches < iso.impute_batches
+    assert sh.impute_cross_hits > 0
+    assert iso.impute_cross_hits == 0  # isolation: nobody else's cells
+
+
+def test_shared_impute_env_gate(monkeypatch):
+    monkeypatch.delenv("QUIP_SHARED_IMPUTE", raising=False)
+    assert not resolve_shared_impute(None)  # isolation is the safe default
+    monkeypatch.setenv("QUIP_SHARED_IMPUTE", "1")
+    assert resolve_shared_impute(None)
+    assert not resolve_shared_impute(False)  # explicit beats env
+    tables, _clean, truth = _instance()
+    assert _service(tables, truth, shared=None).shared_impute
+    monkeypatch.setenv("QUIP_SHARED_IMPUTE", "0")
+    assert not _service(tables, truth, shared=None).shared_impute
+
+
+def test_shared_store_flush_guard():
+    """The concurrent-flush discipline fails loud on reentrant flushes."""
+    tables, _clean, truth = _instance()
+
+    class ReentrantImputer(Imputer):
+        def __init__(self, svc_box):
+            self.box = svc_box
+
+        def impute_attr(self, table, attr, tids):
+            self.box[0].enqueue("R1", "R1.v", np.array([0]))
+            self.box[0].flush()  # flush-within-flush
+            return np.zeros(len(tids))
+
+    from repro.service.impute_store import SharedImputeStore
+
+    store = SharedImputeStore({t: r.copy() for t, r in tables.items()})
+    box = []
+    svc = store.bind(lambda: ReentrantImputer(box))
+    box.append(svc)
+    with pytest.raises(RuntimeError, match="flush"):
+        svc.impute("R0", "R0.v", np.array([0, 1]))
+
+
+# --------------------------------------------------------------------------- #
+# admission control + scheduling
+# --------------------------------------------------------------------------- #
+def test_admission_limit_respected():
+    tables, _clean, truth = _instance()
+    svc = _service(tables, truth, inflight=2)
+    for q in WORKLOAD + WORKLOAD[:1]:
+        svc.submit(q)
+        assert svc.scheduler.running <= 2
+    states = Counter(svc.poll(t) for t in range(1, 7))
+    assert states["running"] == 2 and states["queued"] == 4
+    while svc.step():
+        assert svc.scheduler.running <= 2
+    summary = svc.summary()
+    assert summary["max_concurrent"] == 2
+    assert summary["admission_queued"] == 4
+    assert all(svc.poll(t) == "done" for t in range(1, 7))
+
+
+def test_round_robin_interleaves_sessions():
+    """The scheduler must not run one multi-morsel query to completion
+    before starting the next (no head-of-line blocking)."""
+    tables, _clean, truth = _instance()
+    svc = _service(tables, truth, inflight=2)
+    t1, t2 = svc.submit(_query(4)), svc.submit(_query(3))
+    finish_order = []
+    first_runs = {t1: None, t2: None}
+    steps = 0
+    while svc.scheduler.running or svc._waiting:
+        head = svc.scheduler._ring[0].ticket if svc.scheduler._ring else None
+        if head is not None and first_runs[head] is None:
+            first_runs[head] = steps
+        if not svc.step():
+            break
+        steps += 1
+    # both sessions got their first step before either finished
+    assert None not in first_runs.values()
+    assert max(first_runs.values()) < steps
+
+
+def test_failed_session_surfaces_error():
+    tables, _clean, truth = _instance()
+
+    class BoomImputer(Imputer):
+        def impute_attr(self, table, attr, tids):
+            raise RuntimeError("imputer exploded")
+
+    svc = QuipService(tables, BoomImputer, strategy="eager", morsel_rows=8)
+    ok = svc.submit(_query(4))  # runs but needs imputations → fails
+    svc.run_until_idle()
+    assert svc.poll(ok) == "failed"
+    with pytest.raises(RuntimeError, match="exploded"):
+        svc.result(ok)
+
+
+def test_latency_and_queue_wait_telemetry():
+    tables, _clean, truth = _instance()
+    svc = _service(tables, truth, inflight=1)
+    for q in WORKLOAD[:3]:
+        svc.submit(q)
+    svc.run_until_idle()
+    recs = svc.serving.records
+    assert len(recs) == 3
+    assert all(r.latency_s > 0 for r in recs)
+    # with inflight=1 the later submissions waited for the head query
+    assert recs[-1].queue_wait_s > 0
+    assert svc.serving.latency_quantile(0.95) >= svc.serving.latency_quantile(0.5)
+
+
+# --------------------------------------------------------------------------- #
+# compound (§9.3) queries through the service
+# --------------------------------------------------------------------------- #
+def test_compound_queries_match_extensions():
+    from repro.core.extensions import (
+        execute_minus,
+        execute_nested,
+        execute_union,
+    )
+
+    tables, _clean, truth = _instance()
+    factory = lambda: ImputationService(
+        {t: tables[t].copy() for t in tables},
+        default=lambda: GroundTruthImputer(truth),
+    )
+    l, r = _query(4), _query(2)
+    outer = Query(("R0",), (), (), ("R0.v",))
+    sub = Query(("R1",), (SelectionPredicate("R1.v", "<=", 2),), (),
+                ("R1.k1",))
+
+    want_u, stats_u = execute_union(l, r, tables, factory, strategy="lazy")
+    want_m, _ = execute_minus(l, r, tables, factory, strategy="lazy")
+    want_n, _ = execute_nested(outer, "R0.k1", sub, tables, factory,
+                               strategy="lazy")
+
+    # default morsel_rows: execute_* runs whole-relation morsels, and morsel
+    # size legitimately changes imputation counts (bloom-completion pruning)
+    svc = QuipService(tables, lambda: GroundTruthImputer(truth),
+                      strategy="lazy")
+    got_u, svc_stats_u = svc.result(svc.submit_union(l, r))
+    got_m, _ = svc.result(svc.submit_minus(l, r))
+    got_n, _ = svc.result(svc.submit_nested(outer, "R0.k1", sub))
+    assert Counter(got_u) == Counter(want_u)
+    assert got_m == want_m
+    assert Counter(got_n) == Counter(want_n)
+    # both report the full merged counters, and identical work was done
+    for key in ("imputations", "impute_batches", "impute_flushes",
+                "join_impl"):
+        assert svc_stats_u[key] == stats_u[key]
+
+
+def test_compound_tickets_poll_and_answers():
+    """Compound tickets work through the same poll/answers surface as
+    plain ones (regression: they used to KeyError)."""
+    tables, _clean, truth = _instance()
+    svc = _service(tables, truth)
+    t_u = svc.submit_union(_query(4), _query(2))
+    assert svc.poll(t_u) in ("queued", "running")
+    answers = svc.answers(t_u)
+    assert svc.poll(t_u) == "done"
+    assert answers and answers == svc.result(t_u)[0]
+
+
+def test_release_drops_finished_tickets():
+    tables, _clean, truth = _instance()
+    svc = _service(tables, truth)
+    t1 = svc.submit(_query(3))
+    t_u = svc.submit_union(_query(4), _query(2))
+    with pytest.raises(AssertionError):
+        svc.release(t1)  # unfinished
+    svc.run_until_idle()
+    svc.result(t1), svc.result(t_u)
+    svc.release(t1)
+    svc.release(t_u)  # also drops its branch sessions
+    assert not svc._sessions and not svc._compounds
+    assert len(svc.serving.records) == 3  # telemetry retained
+
+
+def test_failed_compound_branch_stops_rescanning():
+    """A compound whose branch failed leaves the pending scan set and
+    surfaces the branch error via poll/result."""
+    tables, _clean, truth = _instance()
+
+    class BoomImputer(Imputer):
+        def impute_attr(self, table, attr, tids):
+            raise RuntimeError("branch exploded")
+
+    svc = QuipService(tables, BoomImputer, strategy="eager", morsel_rows=8)
+    t_u = svc.submit_union(_query(4), _query(2))
+    svc.run_until_idle()
+    assert svc.poll(t_u) == "failed"
+    assert not svc._pending_compounds
+    with pytest.raises(RuntimeError, match="exploded"):
+        svc.result(t_u)
+
+
+def test_nested_empty_subquery_via_service():
+    tables, _clean, truth = _instance()
+    svc = _service(tables, truth)
+    outer = Query(("R0",), (), (), ("R0.v",))
+    sub = Query(("R1",), (SelectionPredicate("R1.v", "<=", -10 ** 6),), (),
+                ("R1.k1",))
+    answers, _stats = svc.result(svc.submit_nested(outer, "R0.k1", sub))
+    assert answers == []
+
+
+# --------------------------------------------------------------------------- #
+# serving workload generator
+# --------------------------------------------------------------------------- #
+def test_serving_workload_skewed_stream():
+    from repro.data.queries import serving_workload
+    from repro.data.synthetic import wifi_dataset
+    from repro.service.plan_cache import query_signature
+
+    tables, _ = wifi_dataset(n_users=50, n_wifi=300, n_occ=150)
+    stream = list(serving_workload("wifi", tables, n_queries=30,
+                                   n_templates=5, n_tenants=3, seed=3))
+    assert len(stream) == 30
+    tenants = {t for t, _q in stream}
+    assert tenants <= set(range(3)) and len(tenants) > 1
+    sigs = Counter(query_signature(q) for _t, q in stream)
+    assert len(sigs) <= 5  # drawn from the template pool
+    assert max(sigs.values()) > 30 // 5  # skew: hot template over-represented
+    # deterministic for a fixed seed
+    again = list(serving_workload("wifi", tables, n_queries=30,
+                                  n_templates=5, n_tenants=3, seed=3))
+    assert [query_signature(q) for _t, q in stream] == \
+        [query_signature(q) for _t, q in again]
+
+
+def test_scheduler_drain_empty():
+    sched = MorselScheduler()
+    assert sched.drain() == [] and sched.running == 0
