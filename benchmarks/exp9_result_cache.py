@@ -1,0 +1,164 @@
+"""Experiment 9: the answer-level result cache and mutation invalidation.
+
+Two phases over the wifi serving workload:
+
+* **repeat-heavy, unmutated** — the same skewed stream served sequentially
+  (submit → drain, so repeats can hit the result cache) by two services:
+  result cache off (PR-3 serving: plans and imputations shared, answers
+  re-executed) vs on.  Acceptance: result-cache hits > 0, answers
+  bit-identical, and an end-to-end speedup.
+* **mutation-interleaved** — the ``mutating_workload`` stream replayed
+  against an epoch-versioned ``TableRegistry``-backed service with the
+  result cache AND shared impute store on.  After every event, each
+  query's answer is compared against a cold ``QuipService`` constructed on
+  a copy of the post-mutation tables — the acceptance invariant from the
+  staleness fix: no stale plan, imputation, or cached answer may leak
+  across a mutation epoch.
+
+Both invariants are asserted in ``derived`` so CI runs this module as a
+smoke check (like exp8).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from benchmarks.common import IMPUTER_FACTORIES
+from repro.data.queries import mutating_workload, serving_workload
+from repro.data.synthetic import wifi_dataset
+from repro.service import QuipService, TableRegistry
+
+NAME = "exp9_result_cache"
+
+STRATEGY = "adaptive"
+MORSEL_ROWS = 4096
+IMPUTER = "knn"
+
+
+def _sequential(stream, tables, *, result_cache_size: int) -> Dict:
+    """Submit → drain each query in turn (the pattern under which repeats
+    are eligible for result-cache hits at submit time)."""
+    svc = QuipService(
+        tables, IMPUTER_FACTORIES[IMPUTER], strategy=STRATEGY,
+        morsel_rows=MORSEL_ROWS, result_cache_size=result_cache_size,
+    )
+    answers, latencies = [], []
+    t0 = time.perf_counter()
+    for tenant, q in stream:
+        t1 = time.perf_counter()
+        ticket = svc.submit(q, tenant=tenant)
+        answers.append(sorted(svc.answers(ticket)))
+        latencies.append(time.perf_counter() - t1)
+    wall = time.perf_counter() - t0
+    summary = svc.summary()
+    return {
+        "mode": f"result_cache_{'on' if result_cache_size else 'off'}",
+        "queries": len(answers),
+        "wall_s": round(wall, 4), "qps": round(len(answers) / wall, 2),
+        "p50_ms": round(summary["p50_latency_s"] * 1e3, 3),
+        "p95_ms": round(summary["p95_latency_s"] * 1e3, 3),
+        "imputations": summary["imputations"],
+        "plan_cache_hits": summary["plan_cache_hits"],
+        "result_cache_hits": summary.get("result_cache_hits", 0),
+        "_answers": answers,
+    }
+
+
+def _mutation_replay(tables) -> Dict:
+    """The long-lived service vs a cold service per query: bit-identical
+    answers across every mutation epoch."""
+    registry = TableRegistry({t: r.copy() for t, r in tables.items()})
+    svc = QuipService(
+        registry, IMPUTER_FACTORIES[IMPUTER], strategy=STRATEGY,
+        morsel_rows=MORSEL_ROWS, shared_impute=True,
+    )
+    events = list(mutating_workload("wifi", tables, n_queries=12,
+                                    mutate_every=3, n_templates=4, seed=9))
+    queries = mutations = mismatches = 0
+    for event in events:
+        if event[0] == "mutate":
+            event[1].apply(registry)
+            mutations += 1
+            continue
+        _kind, tenant, q = event
+        got = sorted(svc.answers(svc.submit(q, tenant=tenant)))
+        cold = QuipService(
+            {t: registry[t].copy() for t in registry},
+            IMPUTER_FACTORIES[IMPUTER], strategy=STRATEGY,
+            morsel_rows=MORSEL_ROWS, result_cache_size=0,
+        )
+        want = sorted(cold.answers(cold.submit(q)))
+        queries += 1
+        mismatches += int(got != want)
+    summary = svc.summary()
+    return {
+        "mode": "mutation_replay",
+        "queries": queries,
+        "mutations": mutations,
+        "registry_epoch": summary["registry_epoch"],
+        "invalidation_events": summary["invalidation_events"],
+        "plans_invalidated": summary["plans_invalidated"],
+        "results_invalidated": summary["results_invalidated"],
+        "store_cells_invalidated": summary["store_cells_invalidated"],
+        "result_cache_hits": summary["result_cache_hits"],
+        "mismatches": mismatches,
+    }
+
+
+def run(fast: bool = True) -> List[Dict]:
+    if fast:
+        tables, _ = wifi_dataset(n_users=150, n_wifi=2000, n_occ=1000)
+        n_queries = 24
+    else:
+        tables, _ = wifi_dataset()
+        n_queries = 48
+    # repeat-heavy: few templates, strong skew → many repeated signatures
+    stream = list(serving_workload("wifi", tables, n_queries=n_queries,
+                                   n_templates=4, n_tenants=4, skew=1.4,
+                                   seed=5))
+    rows = [
+        _sequential(stream, tables, result_cache_size=0),
+        _sequential(stream, tables, result_cache_size=128),
+        _mutation_replay(tables),
+    ]
+    base_answers = rows[0].pop("_answers")
+    rows[1]["answers_match_uncached"] = int(
+        rows[1].pop("_answers") == base_answers
+    )
+    return rows
+
+
+def derived(rows: List[Dict]) -> Dict[str, float]:
+    by_mode = {r["mode"]: r for r in rows}
+    off = by_mode["result_cache_off"]
+    on = by_mode["result_cache_on"]
+    replay = by_mode["mutation_replay"]
+    # acceptance invariants (CI runs this experiment as a smoke check) —
+    # all deterministic counters, no wall-clock comparisons that could
+    # flake on a loaded runner; the end-to-end speedup is recorded as a
+    # derived metric instead of asserted
+    assert on["result_cache_hits"] > 0, "result cache never hit"
+    assert on["answers_match_uncached"] == 1, "cached answers diverged"
+    assert on["imputations"] < off["imputations"], \
+        "cached repeats re-ran imputation work"
+    assert replay["mismatches"] == 0, "stale answer leaked across a mutation"
+    assert replay["invalidation_events"] > 0, "mutations did not invalidate"
+    return {
+        "result_cache_hits": on["result_cache_hits"],
+        "result_cache_speedup": round(
+            off["wall_s"] / max(on["wall_s"], 1e-9), 2
+        ),
+        "result_cache_p50_ms": on["p50_ms"],
+        "result_cache_p95_ms": on["p95_ms"],
+        "result_cache_imputations_saved": (
+            off["imputations"] - on["imputations"]
+        ),
+        "mutation_answers_match": float(replay["mismatches"] == 0),
+        "mutation_epochs": replay["registry_epoch"],
+        "mutation_plans_invalidated": replay["plans_invalidated"],
+        "mutation_results_invalidated": replay["results_invalidated"],
+        "mutation_store_cells_invalidated": replay[
+            "store_cells_invalidated"
+        ],
+    }

@@ -22,6 +22,7 @@ from benchmarks import (
     exp6_minmax,
     exp7_query_baseline,
     exp8_serving,
+    exp9_result_cache,
     kernels_micro,
 )
 
@@ -34,6 +35,7 @@ MODULES = [
     exp6_minmax,
     exp7_query_baseline,
     exp8_serving,
+    exp9_result_cache,
     kernels_micro,
 ]
 

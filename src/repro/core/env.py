@@ -1,0 +1,38 @@
+"""Environment-variable parsing shared by every QUIP_* gate.
+
+The serving and imputation layers are gated by boolean env vars
+(``QUIP_SHARED_IMPUTE``, ``QUIP_IMPUTE_BATCH``).  Each used to parse the
+raw string ad hoc — ``resolve_shared_impute`` accepted only the literal
+``"1"``, so ``QUIP_SHARED_IMPUTE=true`` silently left sharing *off*.
+:func:`env_flag` is the one shared parser: the usual truthy/falsy spellings
+work, anything else fails loud instead of silently picking a default.
+"""
+
+from __future__ import annotations
+
+import os
+
+__all__ = ["env_flag"]
+
+_TRUE = frozenset({"1", "true", "yes", "on"})
+_FALSE = frozenset({"0", "false", "no", "off"})
+
+
+def env_flag(name: str, default: bool) -> bool:
+    """Boolean env var ``name``: 1/true/yes/on ↔ 0/false/no/off (any case).
+
+    Unset (or empty) returns ``default``; any other value raises
+    ``ValueError`` — a typo'd gate must not silently mean "off".
+    """
+    raw = os.environ.get(name)
+    if raw is None or raw.strip() == "":
+        return bool(default)
+    value = raw.strip().lower()
+    if value in _TRUE:
+        return True
+    if value in _FALSE:
+        return False
+    raise ValueError(
+        f"{name}={raw!r} is not a boolean flag "
+        f"(expected one of {sorted(_TRUE)} or {sorted(_FALSE)})"
+    )

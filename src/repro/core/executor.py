@@ -885,31 +885,49 @@ def _aggregate(rel: MaskedRelation, agg) -> MaskedRelation:
     if gb is None:
         v = rel.values(attr)[rel.is_present(attr)] if attr else np.zeros(rel.num_rows)
         val = reduce_vals(v if attr else np.zeros(rel.num_rows))
+        # SQL semantics: an aggregate over zero non-NULL inputs is NULL —
+        # whether the relation is empty or every surviving row has the attr
+        # absent (outer-pad rows).  Use a clean 0 payload under the absent
+        # bit instead of pushing NaN through the int cast.
+        null_out = op != "count" and len(v) == 0
+        if null_out:
+            val = 0
         schema = Schema("agg", [ColumnSpec(out_name, kind)])
         data = {out_name: np.array([val])}
         out = MaskedRelation.from_columns(schema, data)
-        if rel.num_rows == 0 and op != "count":
+        if null_out:
             out.missing[out_name][:] = False
             out.absent[out_name][:] = True
         return out
 
     keys = rel.values(gb)
     uniq = np.unique(keys)
-    vals = []
+    vals, null_rows = [], []
     for k in uniq:
         m = keys == k
         if attr:
             sel = m & rel.is_present(attr)
-            vals.append(reduce_vals(rel.values(attr)[sel]))
+            group = rel.values(attr)[sel]
         else:
-            vals.append(reduce_vals(np.zeros(int(m.sum()))))
+            group = np.zeros(int(m.sum()))
+        if op != "count" and len(group) == 0:
+            # zero non-NULL inputs in this group → NULL (clean 0 payload
+            # under the absent bit, not NaN through the int cast)
+            vals.append(0)
+            null_rows.append(True)
+        else:
+            vals.append(reduce_vals(group))
+            null_rows.append(False)
     schema = Schema(
         "agg",
         [ColumnSpec(gb, rel.schema.column(gb).kind), ColumnSpec(out_name, kind)],
     )
-    return MaskedRelation.from_columns(
+    out = MaskedRelation.from_columns(
         schema, {gb: uniq, out_name: np.asarray(vals)}
     )
+    if any(null_rows):
+        out.absent[out_name][np.asarray(null_rows, dtype=bool)] = True
+    return out
 
 
 # --------------------------------------------------------------------------- #

@@ -17,6 +17,7 @@ selectivities, after which decisions adapt online.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from collections import defaultdict
 from typing import Dict, List, Optional
@@ -32,11 +33,16 @@ __all__ = [
 
 def nearest_rank_quantile(values: List[float], q: float) -> float:
     """Nearest-rank quantile over ``values`` (0.0 if empty) — the single
-    definition used by both serving telemetry and the benchmarks."""
+    definition used by both serving telemetry and the benchmarks.
+
+    True nearest-rank: the ``ceil(q·n)``-th order statistic (1-indexed).
+    The previous banker's-rounded ``round(q·(n-1))`` was *not* nearest
+    rank — p50 of 4 values returned the 3rd order statistic instead of
+    the 2nd."""
     if not values:
         return 0.0
     ordered = sorted(values)
-    idx = min(len(ordered) - 1, max(0, int(round(q * (len(ordered) - 1)))))
+    idx = min(len(ordered) - 1, max(0, math.ceil(q * len(ordered)) - 1))
     return ordered[idx]
 
 
@@ -164,7 +170,13 @@ class ExecutionCounters:
 # --------------------------------------------------------------------------- #
 @dataclasses.dataclass
 class QueryRecord:
-    """One served query: scheduling timeline + its execution counters."""
+    """One served query: scheduling timeline + its execution counters.
+
+    Failed queries land here too (``failed=True``, counters as far as the
+    session got) — a query that never produced an answer still consumed
+    admission and scheduling resources, and dropping it silently made the
+    telemetry under-report failures.  Result-cache hits record with
+    ``result_cache_hit=True`` and empty counters (no relational work ran)."""
 
     ticket: int
     tenant: Optional[int]
@@ -173,6 +185,8 @@ class QueryRecord:
     latency_s: float  # submit → result available
     plan_cache_hit: bool
     counters: ExecutionCounters
+    result_cache_hit: bool = False
+    failed: bool = False
 
     def as_dict(self) -> Dict[str, object]:
         d = dataclasses.asdict(self)
@@ -192,12 +206,26 @@ class ServingStats:
         self.records: List[QueryRecord] = []
         self.max_concurrent = 0
         self.admission_queued = 0  # submissions that had to wait
+        # registry-mutation invalidation telemetry (see service/registry.py)
+        self.invalidation_events = 0  # mutations observed by the service
+        self.plans_invalidated = 0  # PlanCache entries evicted by mutations
+        self.results_invalidated = 0  # ResultCache entries purged
+        self.store_cells_invalidated = 0  # shared-store cells dropped
 
     def observe_concurrency(self, running: int) -> None:
         self.max_concurrent = max(self.max_concurrent, int(running))
 
     def record_query(self, record: QueryRecord) -> None:
         self.records.append(record)
+
+    def record_invalidation(self, plans: int, results: int,
+                            store_cells: int) -> None:
+        """One registry mutation as seen by a subscribed service: how many
+        plan-cache entries, cached answers, and shared-store cells it cost."""
+        self.invalidation_events += 1
+        self.plans_invalidated += int(plans)
+        self.results_invalidated += int(results)
+        self.store_cells_invalidated += int(store_cells)
 
     # -- aggregates -------------------------------------------------------#
     def latency_quantile(self, q: float) -> float:
@@ -218,6 +246,7 @@ class ServingStats:
         total = self.total_counters()
         return {
             "queries": len(self.records),
+            "failed": sum(1 for r in self.records if r.failed),
             "p50_latency_s": round(self.latency_quantile(0.50), 6),
             "p95_latency_s": round(self.latency_quantile(0.95), 6),
             "queue_wait_s": round(sum(r.queue_wait_s for r in self.records), 6),
@@ -228,6 +257,13 @@ class ServingStats:
             "queries_plan_cache_hit": sum(
                 1 for r in self.records if r.plan_cache_hit
             ),
+            "queries_result_cache_hit": sum(
+                1 for r in self.records if r.result_cache_hit
+            ),
+            "invalidation_events": self.invalidation_events,
+            "plans_invalidated": self.plans_invalidated,
+            "results_invalidated": self.results_invalidated,
+            "store_cells_invalidated": self.store_cells_invalidated,
             "imputations": total.imputations,
             "impute_batches": total.impute_batches,
             "impute_cross_hits": total.impute_cross_hits,

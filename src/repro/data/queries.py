@@ -6,7 +6,8 @@ sets of 20 SPJ(+aggregate) queries per data set, from the paper's template
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -14,7 +15,8 @@ from repro.core.plan import Aggregate, Query
 from repro.core.predicates import JoinPredicate, SelectionPredicate
 from repro.core.relation import MaskedRelation
 
-__all__ = ["workload", "serving_workload", "JOIN_GRAPHS"]
+__all__ = ["workload", "serving_workload", "mutating_workload", "Mutation",
+           "JOIN_GRAPHS"]
 
 # join graphs per data set (chain joins over shared keys)
 JOIN_GRAPHS: Dict[str, List[Tuple[str, str]]] = {
@@ -148,3 +150,88 @@ def serving_workload(
         t_idx = int(rng.choice(n_templates, p=probs))
         tenant = int(rng.integers(0, n_tenants))
         yield tenant, templates[t_idx]
+
+
+# --------------------------------------------------------------------------- #
+# mutation-interleaved serving workload (TableRegistry staleness testing)
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class Mutation:
+    """One registry mutation, self-applying against any object exposing the
+    :class:`repro.service.registry.TableRegistry` mutation API (duck-typed,
+    so this module stays free of a service dependency)."""
+
+    kind: str  # "update_rows" | "delete_rows"
+    table: str
+    rows: Tuple[int, ...]
+    values: Optional[Dict[str, Tuple]] = None  # update_rows only
+
+    def apply(self, registry) -> None:
+        rows = np.asarray(self.rows, dtype=np.int64)
+        if self.kind == "update_rows":
+            registry.update_rows(self.table, rows, {
+                a: np.asarray(v) for a, v in self.values.items()
+            })
+        elif self.kind == "delete_rows":
+            registry.delete_rows(self.table, rows)
+        else:  # pragma: no cover - generator only emits the two kinds
+            raise ValueError(f"unknown mutation kind {self.kind!r}")
+
+
+def mutating_workload(
+    dataset: str,
+    tables: Dict[str, MaskedRelation],
+    n_queries: int = 20,
+    mutate_every: int = 5,
+    n_templates: int = 6,
+    n_tenants: int = 4,
+    skew: float = 1.1,
+    kind: str = "random",
+    seed: int = 0,
+) -> Iterator[Tuple]:
+    """The serving stream with registry mutations interleaved.
+
+    Yields ``("query", tenant, Query)`` events from the same skewed
+    template pool as :func:`serving_workload`, with a
+    ``("mutate", Mutation)`` event after every ``mutate_every`` queries —
+    alternating row updates (plausible values drawn from the column's
+    observed domain) and small deletions.  Deterministic for a fixed seed;
+    row ids stay valid by tracking each table's row count as deletions
+    shrink it.  This is the workload the staleness tests and
+    ``benchmarks/exp9_result_cache.py`` replay: every mutation bumps the
+    table's epoch, so a correct service must re-plan, re-impute, and
+    re-answer — while a stale cache would keep serving the old epoch.
+    """
+    stream = serving_workload(dataset, tables, n_queries=n_queries,
+                              n_templates=n_templates, n_tenants=n_tenants,
+                              skew=skew, kind=kind, seed=seed)
+    rng = np.random.default_rng(seed + 13)
+    mut_tables = sorted({t for j in JOIN_GRAPHS[dataset] for a in j
+                         for t in (a.split(".")[0],)})
+    row_counts = {t: tables[t].num_rows for t in mut_tables}
+    n_mut = 0
+    for i, (tenant, q) in enumerate(stream, 1):
+        yield ("query", tenant, q)
+        if mutate_every and i % mutate_every == 0:
+            t = mut_tables[int(rng.integers(0, len(mut_tables)))]
+            n = row_counts[t]
+            if n <= 4:
+                continue  # table mutated down to nearly nothing
+            k = int(rng.integers(1, max(2, n // 20)))
+            rows = rng.choice(n, size=min(k, n - 1), replace=False)
+            if n_mut % 2 == 0:
+                attr = _numeric_attrs(tables, t)[0]
+                rel = tables[t]
+                domain = rel.values(attr)[rel.is_present(attr)]
+                if len(domain) == 0:
+                    domain = np.zeros(1, dtype=rel.cols[attr].dtype)
+                vals = rng.choice(domain, size=len(rows), replace=True)
+                mut = Mutation("update_rows", t,
+                               tuple(int(r) for r in rows),
+                               {attr: tuple(vals.tolist())})
+            else:
+                mut = Mutation("delete_rows", t,
+                               tuple(int(r) for r in rows))
+                row_counts[t] -= len(rows)
+            n_mut += 1
+            yield ("mutate", mut)

@@ -31,12 +31,12 @@ query B (see ``docs/serving.md`` for the consistency argument).
 
 from __future__ import annotations
 
-import os
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.env import env_flag
 from repro.core.relation import MaskedRelation
 from repro.core.stats import ExecutionCounters, RuntimeStats
 
@@ -66,10 +66,11 @@ class Imputer:
 
 
 def _resolve_batching(batching: Optional[bool]) -> bool:
-    """Explicit argument > ``QUIP_IMPUTE_BATCH`` env ("0" disables) > on."""
+    """Explicit argument > ``QUIP_IMPUTE_BATCH`` env (truthy/falsy via
+    :func:`env_flag`) > on."""
     if batching is not None:
         return bool(batching)
-    return os.environ.get("QUIP_IMPUTE_BATCH", "1") != "0"
+    return env_flag("QUIP_IMPUTE_BATCH", True)
 
 
 class ImputeStore:
@@ -146,6 +147,27 @@ class ImputeStore:
 
     def values_at(self, table: str, attr: str, tids: np.ndarray) -> np.ndarray:
         return self._values[(table, attr)][tids]
+
+    def invalidate(self, table: str) -> int:
+        """Drop everything derived from ``table``: the dense value/filled
+        (/owner) caches for each of its attrs and its fitted models.
+
+        Called by the serving layer when the registry mutates the table —
+        cached cells were imputed from (and models fitted on) the old rows,
+        and the dense arrays are sized to the old row count.  The caches
+        rebuild lazily at the *new* row count on the next ``column_cache``
+        touch, and models refit on the mutated table.  Returns the number
+        of cached cells dropped (invalidation telemetry)."""
+        dropped = 0
+        for key in [k for k in self._values if k[0] == table]:
+            dropped += int(self._filled[key].sum())
+            del self._values[key]
+            del self._filled[key]
+            self._owner.pop(key, None)
+        for key in [k for k in self._models if k[0] == table]:
+            del self._models[key]
+        self._fitted = {fk for fk in self._fitted if fk[0] != table}
+        return dropped
 
     # -- flush guard ------------------------------------------------------#
     def begin_flush(self) -> None:

@@ -3,14 +3,18 @@
 Layers (see docs/serving.md):
 
 * :mod:`repro.service.server`       — submit/poll/result API + admission
+* :mod:`repro.service.registry`     — epoch-versioned mutable table registry
 * :mod:`repro.service.scheduler`    — round-robin morsel interleaver
 * :mod:`repro.service.session`      — per-query state machine
 * :mod:`repro.service.plan_cache`   — LRU plan cache (canonical signatures)
+* :mod:`repro.service.result_cache` — answer cache keyed on table epochs
 * :mod:`repro.service.impute_store` — cross-query imputation sharing
 """
 
 from repro.service.impute_store import SharedImputeStore, resolve_shared_impute
 from repro.service.plan_cache import PlanCache, query_signature
+from repro.service.registry import TableRegistry
+from repro.service.result_cache import ResultCache
 from repro.service.scheduler import MorselScheduler
 from repro.service.server import QuipService
 from repro.service.session import QuerySession
@@ -21,6 +25,8 @@ __all__ = [
     "MorselScheduler",
     "PlanCache",
     "query_signature",
+    "ResultCache",
     "SharedImputeStore",
+    "TableRegistry",
     "resolve_shared_impute",
 ]

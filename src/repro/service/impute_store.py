@@ -10,7 +10,9 @@ instead of once per query.
 
 Consistency argument (docs/serving.md expands on this):
 
-* base tables in the registry are immutable while the service is up;
+* base tables only change through the epoch-versioned ``TableRegistry``,
+  whose mutation hooks drop this store's per-table caches and fitted
+  models (``ImputeStore.invalidate``) before any post-mutation query runs;
 * imputers are deterministic functions of (base table, attr, tid) once
   fitted, and fitting is itself a deterministic function of the base table;
 * therefore every query — shared store or not — would compute the *same*
@@ -32,9 +34,9 @@ constructing QuipService with ``shared_impute=True`` or by setting
 from __future__ import annotations
 
 import itertools
-import os
 from typing import Callable, Dict, Optional
 
+from repro.core.env import env_flag
 from repro.core.relation import MaskedRelation
 from repro.core.stats import ExecutionCounters, RuntimeStats
 from repro.imputers.base import ImputationService, Imputer, ImputeStore
@@ -43,10 +45,11 @@ __all__ = ["SharedImputeStore", "resolve_shared_impute"]
 
 
 def resolve_shared_impute(shared: Optional[bool]) -> bool:
-    """Explicit argument > ``QUIP_SHARED_IMPUTE`` env ("1" enables) > off."""
+    """Explicit argument > ``QUIP_SHARED_IMPUTE`` env (truthy/falsy via
+    :func:`env_flag` — ``true``/``yes``/``on`` work, garbage raises) > off."""
     if shared is not None:
         return bool(shared)
-    return os.environ.get("QUIP_SHARED_IMPUTE", "0") == "1"
+    return env_flag("QUIP_SHARED_IMPUTE", False)
 
 
 class SharedImputeStore(ImputeStore):

@@ -1,0 +1,71 @@
+"""Capacity-bounded LRU shared by the serving caches.
+
+PlanCache and ResultCache need identical bookkeeping — an OrderedDict LRU
+with hit/miss/eviction counters, flat ``stats()``, and table-driven
+invalidation for registry mutations.  One implementation lives here;
+subclasses only say which tables a cached key depends on.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Dict, Iterable, Optional
+
+__all__ = ["LruCache"]
+
+
+class LruCache:
+    """OrderedDict-backed LRU with hit/miss/eviction/invalidation counters.
+
+    Subclasses implement :meth:`_key_tables` — the base tables an entry
+    was derived from — so :meth:`invalidate_table` can purge everything a
+    registry mutation staled."""
+
+    def __init__(self, capacity: int):
+        assert capacity >= 1
+        self.capacity = int(capacity)
+        self._entries: OrderedDict = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.invalidations = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def lookup(self, key) -> Optional[object]:
+        """Entry for ``key`` (LRU-touched, counted) or None on a miss."""
+        entry = self._entries.get(key)
+        if entry is not None:
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return entry
+        self.misses += 1
+        return None
+
+    def insert(self, key, value) -> None:
+        self._entries[key] = value
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+
+    def _key_tables(self, key) -> Iterable[str]:
+        raise NotImplementedError
+
+    def invalidate_table(self, table: str) -> int:
+        """Purge every entry derived from ``table``; returns the count."""
+        stale = [k for k in self._entries if table in self._key_tables(k)]
+        for k in stale:
+            del self._entries[k]
+        self.invalidations += len(stale)
+        return len(stale)
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "size": len(self._entries),
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "invalidations": self.invalidations,
+        }

@@ -10,19 +10,22 @@ verify/filter sets), so the cached tree itself must stay pristine.
 
 The signature canonicalizes everything the planner looks at — tables,
 selections (``in``-sets sorted), joins, projection, aggregate, planner
-name.  It deliberately does *not* hash table contents: the registry is
-immutable while a service is up, and invalidation-on-mutation is an open
-item (see ROADMAP).
+name.  It deliberately does *not* hash table contents: a plan is valid
+exactly until one of the tables it was costed on mutates, at which point
+the registry's invalidation hook calls :meth:`PlanCache.invalidate_table`
+— the cached join order was driven by selectivity scans of the old data,
+so every dependent entry is evicted and the next submission re-plans
+against the mutated registry (see docs/serving.md).
 """
 
 from __future__ import annotations
 
-from collections import OrderedDict
 from typing import Dict, Optional, Tuple
 
 from repro.core.executor import make_plan
 from repro.core.plan import PlanNode, Query, clone_plan
 from repro.core.relation import MaskedRelation
+from repro.service.lru import LruCache
 
 __all__ = ["PlanCache", "query_signature"]
 
@@ -48,44 +51,27 @@ def query_signature(query: Query, planner: str = "imputedb") -> Tuple:
             tuple(query.projection), agg)
 
 
-class PlanCache:
+class PlanCache(LruCache):
     """LRU over ``query_signature`` → pristine SPJ plan, with hit/miss
-    counters.  ``get`` always returns a fresh :func:`clone_plan` copy."""
+    counters.  ``get`` always returns a fresh :func:`clone_plan` copy.
+    ``invalidate_table`` evicts every plan whose query reads the mutated
+    table — its join order was chosen from now-stale selectivity scans."""
 
     def __init__(self, capacity: int = 64, planner: str = "imputedb"):
-        assert capacity >= 1
-        self.capacity = int(capacity)
+        super().__init__(capacity)
         self.planner = planner
-        self._plans: "OrderedDict[Tuple, PlanNode]" = OrderedDict()
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
-
-    def __len__(self) -> int:
-        return len(self._plans)
 
     def get(self, query: Query, tables: Dict[str, MaskedRelation],
             planner: Optional[str] = None) -> Tuple[PlanNode, bool]:
         """Returns ``(plan, hit)``; plans the query on a miss."""
         planner = planner or self.planner
         sig = query_signature(query, planner)
-        cached = self._plans.get(sig)
+        cached = self.lookup(sig)
         if cached is not None:
-            self._plans.move_to_end(sig)
-            self.hits += 1
             return clone_plan(cached), True
         plan = make_plan(query, tables, planner=planner)
-        self._plans[sig] = plan
-        while len(self._plans) > self.capacity:
-            self._plans.popitem(last=False)
-            self.evictions += 1
-        self.misses += 1
+        self.insert(sig, plan)
         return clone_plan(plan), False
 
-    def stats(self) -> Dict[str, int]:
-        return {
-            "size": len(self._plans),
-            "hits": self.hits,
-            "misses": self.misses,
-            "evictions": self.evictions,
-        }
+    def _key_tables(self, key: Tuple) -> Tuple[str, ...]:
+        return key[1]  # query_signature: (planner, tables, ...)

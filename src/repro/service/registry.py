@@ -1,0 +1,211 @@
+"""Epoch-versioned table registry: the mutable source of truth for serving.
+
+QUIP's premise is that imputation happens *at query time* against the data
+as it stands (paper §1, §6) — so the serving layer cannot assume the
+registry is frozen forever.  :class:`TableRegistry` wraps the tables dict
+behind a mutation API and a **global + per-table epoch counter**; every
+cache above it (plan cache, result cache, shared impute store) either keys
+on the epochs or is invalidated through the registry's subscriber hooks
+the moment a table changes.
+
+Semantics:
+
+* The registry is a read-only :class:`~collections.abc.Mapping` — every
+  call site that used to take ``Dict[str, MaskedRelation]`` (planner,
+  executors, imputation services) works unchanged.
+* Mutations are **copy-on-write**: they build a fresh
+  :class:`MaskedRelation` and swap it in, so table snapshots already taken
+  by in-flight sessions are untouched (each query stays point-in-time
+  consistent with the registry as of its admission).
+* ``delete_rows`` / ``insert_rows`` rebuild the base table canonically
+  (``tids`` re-indexed to ``arange(n)``), so the dense per-(table, attr)
+  imputation caches — recreated after invalidation — size to the new row
+  count and base-row ids line up again.
+* Every mutation bumps the table's epoch and the global epoch, then
+  notifies subscribers.  Subscribers may also register a ``before`` hook
+  that can veto the mutation (raise) while nothing has been committed —
+  QuipService uses this to refuse mutating a table that shared-impute
+  sessions are currently reading.
+"""
+
+from __future__ import annotations
+
+from collections.abc import Mapping
+from typing import Callable, Dict, Iterable, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.relation import MaskedRelation
+
+__all__ = ["TableRegistry"]
+
+
+class TableRegistry(Mapping):
+    """Mapping of table name → :class:`MaskedRelation` with epoch-counted,
+    copy-on-write mutations and invalidation callbacks."""
+
+    def __init__(self, tables: Dict[str, MaskedRelation]):
+        self._tables: Dict[str, MaskedRelation] = dict(tables)
+        self._epochs: Dict[str, int] = {t: 0 for t in self._tables}
+        self._global_epoch = 0
+        # (before, after) hooks; ``before`` may veto by raising
+        self._subscribers: List[Tuple[Optional[Callable[[str], None]],
+                                      Callable[[str], None]]] = []
+
+    # ------------------------------------------------------------------ #
+    # Mapping interface (drop-in for the plain tables dict)
+    # ------------------------------------------------------------------ #
+    def __getitem__(self, table: str) -> MaskedRelation:
+        return self._tables[table]
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._tables)
+
+    def __len__(self) -> int:
+        return len(self._tables)
+
+    # ------------------------------------------------------------------ #
+    # epochs
+    # ------------------------------------------------------------------ #
+    @property
+    def global_epoch(self) -> int:
+        """Total mutations committed against any table."""
+        return self._global_epoch
+
+    def epoch(self, table: str) -> int:
+        return self._epochs[table]
+
+    def epochs(self, tables: Iterable[str]) -> Tuple[int, ...]:
+        """Per-table epochs in ``tables`` order — the version vector the
+        result cache keys on."""
+        return tuple(self._epochs[t] for t in tables)
+
+    # ------------------------------------------------------------------ #
+    # invalidation hooks
+    # ------------------------------------------------------------------ #
+    def subscribe(self, on_mutation: Callable[[str], None], *,
+                  before: Optional[Callable[[str], None]] = None) -> None:
+        """Register invalidation hooks.  ``before(table)`` runs pre-commit
+        and may raise to veto (nothing mutated yet); ``on_mutation(table)``
+        runs post-commit, observing the new table and epochs."""
+        self._subscribers.append((before, on_mutation))
+
+    def unsubscribe(self, on_mutation: Callable[[str], None]) -> None:
+        """Remove the hooks registered with ``on_mutation``.  A subscriber
+        discarded while the registry lives on (service churn over one
+        long-lived registry) must unsubscribe, or the registry keeps it —
+        and its caches — alive and pays its invalidation work on every
+        mutation."""
+        # equality, not identity: bound methods are re-created per attribute
+        # access, so ``registry.unsubscribe(svc._on_mutation)`` must match
+        # the equal-but-distinct object stored by subscribe
+        self._subscribers = [
+            (b, a) for b, a in self._subscribers if a != on_mutation
+        ]
+
+    # ------------------------------------------------------------------ #
+    # mutation API (all copy-on-write; all bump epochs + notify)
+    # ------------------------------------------------------------------ #
+    def _commit(self, table: str,
+                build: Callable[[MaskedRelation], MaskedRelation]) -> None:
+        if table not in self._tables:
+            raise KeyError(f"unknown table {table!r}")
+        for before, _after in self._subscribers:
+            if before is not None:
+                before(table)
+        self._tables[table] = build(self._tables[table])
+        self._epochs[table] += 1
+        self._global_epoch += 1
+        for _before, after in self._subscribers:
+            after(table)
+
+    @staticmethod
+    def _check_rows(rel: MaskedRelation, rows: np.ndarray) -> np.ndarray:
+        rows = np.asarray(rows, dtype=np.int64)
+        if len(rows) and (rows.min() < 0 or rows.max() >= rel.num_rows):
+            raise IndexError(
+                f"row ids out of range [0, {rel.num_rows}): "
+                f"{rows[(rows < 0) | (rows >= rel.num_rows)][:8].tolist()}"
+            )
+        return rows
+
+    def update_rows(self, table: str, rows: np.ndarray,
+                    values: Dict[str, np.ndarray]) -> None:
+        """Overwrite ``values[attr][i]`` into row ``rows[i]`` of ``table``
+        for each attr; updated cells become known (missing bit cleared)."""
+
+        def build(rel: MaskedRelation) -> MaskedRelation:
+            idx = self._check_rows(rel, rows)
+            new = rel.copy()
+            for attr, vals in values.items():
+                vals = np.asarray(vals)
+                if len(vals) != len(idx):
+                    raise ValueError(
+                        f"{table}.{attr}: {len(vals)} values for "
+                        f"{len(idx)} rows"
+                    )
+                new.set_values(attr, idx, vals)
+            return new
+
+        self._commit(table, build)
+
+    def delete_rows(self, table: str, rows: np.ndarray) -> None:
+        """Drop rows by id; the table is rebuilt canonically (``tids``
+        re-indexed to ``arange`` of the new row count)."""
+
+        def build(rel: MaskedRelation) -> MaskedRelation:
+            idx = self._check_rows(rel, rows)
+            keep = np.ones(rel.num_rows, dtype=bool)
+            keep[idx] = False
+            return MaskedRelation.from_columns(
+                rel.schema,
+                {a: rel.cols[a][keep] for a in rel.cols},
+                missing={a: rel.missing[a][keep] for a in rel.missing},
+                base_table=table,
+            )
+
+        self._commit(table, build)
+
+    def insert_rows(self, table: str, values: Dict[str, np.ndarray],
+                    missing: Optional[Dict[str, np.ndarray]] = None) -> None:
+        """Append rows (``values[attr]`` one array per column; ``missing``
+        optionally marks imputable cells among them)."""
+
+        def build(rel: MaskedRelation) -> MaskedRelation:
+            lengths = {len(np.asarray(v)) for v in values.values()}
+            if len(lengths) != 1:
+                raise ValueError(f"ragged insert into {table!r}: {lengths}")
+            (n_new,) = lengths
+            for a, mask in (missing or {}).items():
+                if len(np.asarray(mask)) != n_new:
+                    raise ValueError(
+                        f"insert into {table!r}: missing mask for {a!r} has "
+                        f"{len(np.asarray(mask))} rows, values have {n_new}"
+                    )
+            cols, miss = {}, {}
+            for spec in rel.schema.columns:
+                if spec.name not in values:
+                    raise ValueError(
+                        f"insert into {table!r} missing column {spec.name!r}"
+                    )
+                cols[spec.name] = np.concatenate([
+                    rel.cols[spec.name],
+                    np.asarray(values[spec.name], dtype=spec.np_dtype),
+                ])
+                new_miss = (
+                    np.asarray(missing[spec.name], dtype=bool)
+                    if missing and spec.name in missing
+                    else np.zeros(n_new, dtype=bool)
+                )
+                miss[spec.name] = np.concatenate(
+                    [rel.missing[spec.name], new_miss]
+                )
+            return MaskedRelation.from_columns(
+                rel.schema, cols, missing=miss, base_table=table
+            )
+
+        self._commit(table, build)
+
+    def replace_table(self, table: str, relation: MaskedRelation) -> None:
+        """Swap in a whole new relation under an existing name."""
+        self._commit(table, lambda _old: relation)

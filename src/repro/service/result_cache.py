@@ -1,0 +1,59 @@
+"""Answer-level LRU result cache, keyed on query signature × knobs × epochs.
+
+The plan cache shares planning and the shared impute store shares imputed
+values, but until this layer an identical query signature still re-executed
+all of the relational work.  The :class:`TableRegistry`'s epochs are what
+make caching the *answer* sound: the key is
+
+    (query_signature, exec-knob signature, epochs of the tables read)
+
+so a hit is only possible when every table the query reads is bit-identical
+to the execution that produced the cached answer — execution is a
+deterministic function of (query, knobs, tables) (imputers included; see
+docs/serving.md), hence the cached :class:`ExecutionResult` is exactly what
+re-running would produce.  Any mutation bumps the touched table's epoch,
+which makes all dependent keys unreachable; ``invalidate_table`` also purges
+them eagerly so stale answers don't squat in the LRU.
+
+``QuipService.submit`` consults the cache before planning; a completed
+session inserts its result keyed on the epochs it actually observed at
+admission (and skips insertion if a mutation landed mid-flight).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+from repro.core.executor import ExecutionResult
+from repro.service.lru import LruCache
+
+__all__ = ["ResultCache"]
+
+# (query_signature, exec_signature, per-table epochs); the query signature's
+# second element is the tables tuple (see plan_cache.query_signature), which
+# invalidate_table scans.
+ResultKey = Tuple[Tuple, Tuple, Tuple[int, ...]]
+
+
+class ResultCache(LruCache):
+    """LRU over :data:`ResultKey` → materialized :class:`ExecutionResult`
+    (answer relation + counters), with hit/miss/invalidation telemetry.
+
+    Cached results are shared, read-only objects: callers consume them via
+    ``answer_tuples()`` / counters and must not mutate the relation.
+    ``invalidate_table`` purges every entry whose query reads the mutated
+    table (the bumped epoch already makes them unreachable; purging frees
+    the memory now).
+    """
+
+    def __init__(self, capacity: int = 128):
+        super().__init__(capacity)
+
+    def get(self, key: ResultKey) -> Optional[ExecutionResult]:
+        return self.lookup(key)
+
+    def put(self, key: ResultKey, result: ExecutionResult) -> None:
+        self.insert(key, result)
+
+    def _key_tables(self, key: ResultKey) -> Tuple[str, ...]:
+        return key[0][1]  # the query signature's tables tuple

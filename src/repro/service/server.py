@@ -1,18 +1,23 @@
 """QuipService: concurrent query serving with shared state.
 
 The serving layer the ROADMAP's "heavy traffic" north star needs on top of
-the single-query engine: a submit/poll/result API over a shared table
-registry, admission control with a configurable in-flight limit, a
-round-robin morsel-interleaving scheduler, an LRU plan cache, and (gated)
-cross-query imputation sharing.
+the single-query engine: a submit/poll/result API over an epoch-versioned
+:class:`TableRegistry`, admission control with a configurable in-flight
+limit, a round-robin morsel-interleaving scheduler, an LRU plan cache, an
+answer-level result cache keyed on table epochs, and (gated) cross-query
+imputation sharing.  Registry mutations invalidate every dependent cache
+(see docs/serving.md "Invalidation & result cache").
 
 ::
 
-    service = QuipService(tables, imputer_factory, max_inflight=4,
+    registry = TableRegistry(tables)
+    service = QuipService(registry, imputer_factory, max_inflight=4,
                           shared_impute=True)
     t1 = service.submit(q1); t2 = service.submit(q2, tenant=7)
     service.run_until_idle()
     res = service.result(t1)           # ExecutionResult
+    registry.update_rows("R0", rows, {"R0.v": new_vals})  # epoch bump +
+    service.submit(q1)                 # ... fresh plan, fresh answer
     print(service.summary())           # serving_* telemetry
 
 Compound (§9.3) queries route through sessions too: ``submit_union`` /
@@ -39,10 +44,12 @@ from repro.core.extensions import (
 )
 from repro.core.plan import Query
 from repro.core.relation import MaskedRelation
-from repro.core.stats import QueryRecord, ServingStats
+from repro.core.stats import ExecutionCounters, QueryRecord, ServingStats
 from repro.imputers.base import ImputationService, Imputer
 from repro.service.impute_store import SharedImputeStore, resolve_shared_impute
-from repro.service.plan_cache import PlanCache
+from repro.service.plan_cache import PlanCache, query_signature
+from repro.service.registry import TableRegistry
+from repro.service.result_cache import ResultCache
 from repro.service.scheduler import MorselScheduler
 from repro.service.session import DONE, FAILED, QUEUED, RUNNING, QuerySession
 
@@ -64,11 +71,22 @@ class _Compound:
 
 
 class QuipService:
-    """Concurrent query-serving engine over a fixed table registry.
+    """Concurrent query-serving engine over an epoch-versioned registry.
 
-    ``tables`` is treated as immutable while the service is up (the plan
-    cache and the shared imputation store both key off its contents);
-    mutation invalidation is an open ROADMAP item.
+    ``tables`` may be a plain dict (wrapped in a private
+    :class:`TableRegistry`) or an existing registry, possibly shared with
+    other services.  Mutations go through the registry's mutation API; the
+    service subscribes to them and keeps every cache honest: dependent plan
+    cache entries are evicted (their selectivity-driven join order is
+    stale), cached answers are purged, and the shared impute store drops
+    the mutated table's cells and fitted models.  Queries admitted after a
+    mutation observe the new data; queries admitted before keep their
+    point-in-time snapshot.
+
+    The answer-level :class:`ResultCache` (``result_cache_size=0``
+    disables) is keyed on (query signature, exec-knob signature, table
+    epochs), so a repeated signature on unmutated tables skips planning and
+    execution entirely and any mutation makes the stale key unreachable.
     """
 
     def __init__(
@@ -79,6 +97,7 @@ class QuipService:
         *,
         max_inflight: int = 4,
         plan_cache_size: int = 64,
+        result_cache_size: int = 128,
         shared_impute: Optional[bool] = None,
         strategy: str = "adaptive",
         planner: str = "imputedb",
@@ -89,16 +108,24 @@ class QuipService:
         use_vf: bool = True,
     ):
         assert max_inflight >= 1
-        self.tables = tables
+        self.registry: TableRegistry = (
+            tables if isinstance(tables, TableRegistry)
+            else TableRegistry(tables)
+        )
+        # the registry is a Mapping — a drop-in for the old tables dict
+        self.tables = self.registry
         self._factory = imputer_factory
         self._per_attr = dict(per_attr or {})
         self.max_inflight = int(max_inflight)
         self.default_strategy = strategy
         self.shared_impute = resolve_shared_impute(shared_impute)
         self.store: Optional[SharedImputeStore] = (
-            SharedImputeStore(tables) if self.shared_impute else None
+            SharedImputeStore(self.registry) if self.shared_impute else None
         )
         self.plan_cache = PlanCache(plan_cache_size, planner=planner)
+        self.result_cache: Optional[ResultCache] = (
+            ResultCache(result_cache_size) if result_cache_size else None
+        )
         self.scheduler = MorselScheduler()
         self.serving = ServingStats()
         self._exec_kwargs = {
@@ -113,6 +140,8 @@ class QuipService:
         self._waiting: Deque[QuerySession] = deque()
         self._compounds: Dict[int, _Compound] = {}
         self._pending_compounds: set = set()  # unresolved tickets (step scan)
+        self.registry.subscribe(self._on_mutation,
+                                before=self._check_mutation_safe)
 
     # ------------------------------------------------------------------ #
     # per-query resources
@@ -132,6 +161,22 @@ class QuipService:
     # ------------------------------------------------------------------ #
     # submit / poll / result
     # ------------------------------------------------------------------ #
+    def _result_key(self, query: Query, strategy: str) -> Optional[Tuple]:
+        """ResultCache key for ``query`` at the registry's *current* epochs
+        (None when caching is off or the query names an unknown table —
+        the latter is left to fail loudly at admission)."""
+        if self.result_cache is None:
+            return None
+        try:
+            epochs = self.registry.epochs(query.tables)
+        except KeyError:
+            return None
+        exec_sig = (strategy, self.shared_impute) + tuple(
+            sorted(self._exec_kwargs.items())
+        )
+        return (query_signature(query, self.plan_cache.planner), exec_sig,
+                epochs)
+
     def _session_setup(self, query: Query, strategy: str):
         """Materialize a session's resources — runs at admission, so a deep
         waiting queue holds no table copies and the latency clock covers
@@ -144,14 +189,29 @@ class QuipService:
             plan, hit = self.plan_cache.get(query, self.tables)
         tables = {t: self.tables[t].copy() for t in query.tables}
         engine = self._make_engine(tables)
-        return plan, engine, tables, hit
+        # the insertion key is computed here, not at submit: a mutation may
+        # land while the session waits in the admission queue, and the key
+        # must capture the epochs the execution actually observes
+        return plan, engine, tables, hit, self._result_key(query, strategy)
 
     def submit(self, query: Query, *, strategy: Optional[str] = None,
                tenant: Optional[int] = None) -> int:
-        """Enqueue a query; returns its ticket.  Admission is immediate when
-        fewer than ``max_inflight`` sessions are running, else the session
-        waits in FIFO order."""
+        """Enqueue a query; returns its ticket.  The result cache is
+        consulted first: a signature already answered at the current table
+        epochs completes immediately without planning or execution.
+        Otherwise admission is immediate when fewer than ``max_inflight``
+        sessions are running, else the session waits in FIFO order."""
         strategy = strategy or self.default_strategy
+        if self.result_cache is not None:
+            key = self._result_key(query, strategy)
+            cached = self.result_cache.get(key) if key is not None else None
+            if cached is not None:
+                session = QuerySession.from_cached(
+                    next(self._tickets), query, strategy, cached, tenant
+                )
+                self._sessions[session.ticket] = session
+                self._finalize(session)
+                return session.ticket
         session = QuerySession(
             ticket=next(self._tickets),
             query=query,
@@ -219,6 +279,17 @@ class QuipService:
             answers, _stats = self.result(ticket)
             return answers
         return self.result(ticket).answer_tuples()
+
+    def close(self) -> None:
+        """Detach this service from its registry's subscriber hooks.
+
+        Required when the registry outlives the service (several services
+        over one shared registry): an attached-but-discarded service would
+        be kept alive by the subscription, its plan/result caches never
+        freed, and every future mutation would still pay its invalidation
+        scan.  The service remains usable afterwards, just un-notified —
+        don't submit to it across later mutations."""
+        self.registry.unsubscribe(self._on_mutation)
 
     def release(self, ticket: int) -> None:
         """Drop a finished ticket's retained result.
@@ -354,29 +425,95 @@ class QuipService:
 
     def _finalize(self, session: QuerySession) -> None:
         if session.state == DONE:
-            self.serving.record_query(QueryRecord(
-                ticket=session.ticket,
-                tenant=session.tenant,
-                strategy=session.strategy,
-                queue_wait_s=session.queue_wait_s,
-                latency_s=session.latency_s,
-                plan_cache_hit=session.plan_cache_hit,
-                counters=session.result.counters,
-            ))
+            if session.result_cache_hit:
+                # no relational work ran — record the hit with empty
+                # counters so totals keep meaning "work actually done"
+                counters = ExecutionCounters(
+                    join_impl=session.result.counters.join_impl
+                )
+            else:
+                counters = session.result.counters
+                self._cache_result(session)
+        else:  # FAILED: the query still consumed admission + scheduling —
+            # record it (counters as far as the session got) instead of
+            # silently dropping it from the telemetry
+            counters = (
+                dataclasses.replace(session.engine.counters)
+                if session.engine is not None else ExecutionCounters()
+            )
+        self.serving.record_query(QueryRecord(
+            ticket=session.ticket,
+            tenant=session.tenant,
+            strategy=session.strategy,
+            queue_wait_s=session.queue_wait_s,
+            latency_s=session.latency_s,
+            plan_cache_hit=session.plan_cache_hit,
+            counters=counters,
+            result_cache_hit=session.result_cache_hit,
+            failed=session.state == FAILED,
+        ))
         # only the result (and its counters) outlives completion — the
         # table copies / engine / coroutine are the session's bulk
         session.release_resources()
+
+    def _cache_result(self, session: QuerySession) -> None:
+        """Insert a completed execution into the result cache, unless a
+        mutation landed mid-flight (the key's epochs no longer match — the
+        snapshot this session answered from is already stale)."""
+        if self.result_cache is None or session.result_key is None:
+            return
+        current = self._result_key(session.query, session.strategy)
+        if current == session.result_key:
+            self.result_cache.put(session.result_key, session.result)
+
+    # ------------------------------------------------------------------ #
+    # registry-mutation invalidation (subscribed in __init__)
+    # ------------------------------------------------------------------ #
+    def _check_mutation_safe(self, table: str) -> None:
+        """Pre-commit veto: with a shared impute store, mutating a table
+        that running sessions are reading would mix epochs inside one query
+        (their executors scan pre-mutation snapshots while the store refits
+        on the new rows).  Fail loud before anything is committed; drain
+        first.  Per-query isolation needs no veto — admitted sessions own
+        point-in-time copies."""
+        if self.store is None:
+            return
+        busy = [s.ticket for s in self.scheduler.sessions()
+                if table in s.query.tables]
+        if busy:
+            raise RuntimeError(
+                f"mutation of {table!r} while shared-impute sessions "
+                f"{busy} are reading it — drain the service first "
+                f"(run_until_idle) or use per-query isolation"
+            )
+
+    def _on_mutation(self, table: str) -> None:
+        """Post-commit invalidation: the mutated table's epoch already
+        advanced; evict every cache entry derived from its old contents."""
+        plans = self.plan_cache.invalidate_table(table)
+        results = (
+            self.result_cache.invalidate_table(table)
+            if self.result_cache is not None else 0
+        )
+        cells = self.store.invalidate(table) if self.store is not None else 0
+        self.serving.record_invalidation(plans, results, cells)
 
     # ------------------------------------------------------------------ #
     # telemetry
     # ------------------------------------------------------------------ #
     def summary(self) -> Dict[str, float]:
-        """Flat ``serving_*``-ready metrics: scheduling, plan cache, and
-        cross-query imputation sharing."""
+        """Flat ``serving_*``-ready metrics: scheduling, plan cache, result
+        cache, invalidation, and cross-query imputation sharing."""
         out = self.serving.summary()
         out.update({
             f"plan_cache_{k}": v for k, v in self.plan_cache.stats().items()
         })
+        if self.result_cache is not None:
+            out.update({
+                f"result_cache_{k}": v
+                for k, v in self.result_cache.stats().items()
+            })
+        out["registry_epoch"] = self.registry.global_epoch
         out["shared_impute"] = int(self.shared_impute)
         if self.store is not None:
             out["store_filled_cells"] = self.store.filled_cells()

@@ -33,10 +33,11 @@ __all__ = ["QuerySession", "QUEUED", "RUNNING", "DONE", "FAILED"]
 
 QUEUED, RUNNING, DONE, FAILED = "queued", "running", "done", "failed"
 
-# plan (None for offline), engine, table copies, plan_cache_hit
+# plan (None for offline), engine, table copies, plan_cache_hit,
+# result-cache key (epochs observed at admission; None = don't cache)
 SessionSetup = Callable[
     [], Tuple[Optional[PlanNode], ImputationService,
-              Dict[str, MaskedRelation], bool]
+              Dict[str, MaskedRelation], bool, Optional[Tuple]]
 ]
 
 
@@ -61,6 +62,10 @@ class QuerySession:
         self.engine: Optional[ImputationService] = None
         self.tables: Optional[Dict[str, MaskedRelation]] = None
         self.plan_cache_hit = False
+        self.result_cache_hit = False
+        # set at admission: where a DONE result may be inserted in the
+        # ResultCache (captures the table epochs the execution observed)
+        self.result_key: Optional[Tuple] = None
 
         self.state = QUEUED
         self.submitted_at = time.perf_counter()
@@ -85,6 +90,22 @@ class QuerySession:
         return self.finished_at - self.submitted_at
 
     # -- lifecycle --------------------------------------------------------#
+    @classmethod
+    def from_cached(cls, ticket: int, query: Query, strategy: str,
+                    result: ExecutionResult,
+                    tenant: Optional[int] = None) -> "QuerySession":
+        """A session born DONE from a result-cache hit: no resources, no
+        scheduling — ``result``/``answers``/``poll`` behave exactly like a
+        session that ran (the cached ExecutionResult is shared, read-only)."""
+        session = cls(ticket, query, strategy, setup=lambda: None,
+                      tenant=tenant)
+        session.result = result
+        session.result_cache_hit = True
+        session.state = DONE
+        session.started_at = session.submitted_at
+        session.finished_at = time.perf_counter()
+        return session
+
     def start(self) -> None:
         """Admission: materialize resources, build the step coroutine."""
         assert self.state == QUEUED, self.state
@@ -92,7 +113,7 @@ class QuerySession:
         self.state = RUNNING
         try:
             (self.plan, self.engine, self.tables,
-             self.plan_cache_hit) = self._setup()
+             self.plan_cache_hit, self.result_key) = self._setup()
             if self.strategy == "offline":
                 self._gen = self._offline_steps()
             else:

@@ -222,6 +222,30 @@ def test_minmax_optimization_correct(seed, strategy):
         assert res.answer_tuples() == expected
 
 
+def test_aggregate_over_all_absent_is_null():
+    """Regression: min/max over rows whose agg attr is entirely absent
+    (outer-pad NULLs) must answer NULL, not push NaN through the int cast
+    (which silently yielded INT64_MIN).  Same for empty group-by groups."""
+    from repro.core.executor import _aggregate
+    from repro.core.plan import Aggregate as Agg
+
+    schema = Schema("T", [ColumnSpec("T.g", "int"), ColumnSpec("T.v", "int")])
+    rel = MaskedRelation.from_columns(
+        schema, {"T.g": np.array([1, 1, 2]), "T.v": np.array([0, 0, 5])},
+        base_table="T",
+    )
+    rel.absent["T.v"][:2] = True  # group 1 has zero non-NULL inputs
+    out = _aggregate(rel, Agg("min", "T.v"))
+    assert out.to_sorted_tuples() == [(5,)]
+    rel_all = rel.filter(np.array([True, True, False]))
+    out = _aggregate(rel_all, Agg("min", "T.v"))
+    assert out.to_sorted_tuples() == [(None,)]  # NULL, not INT64_MIN
+    out = _aggregate(rel, Agg("count", "T.v", group_by="T.g"))
+    assert out.to_sorted_tuples() == [(1, 0), (2, 1)]  # COUNT skips NULLs
+    out = _aggregate(rel, Agg("max", "T.v", group_by="T.g"))
+    assert out.to_sorted_tuples() == [(1, None), (2, 5)]
+
+
 def test_lazy_never_more_imputations_than_eager_on_paper():
     tables = paper_tables()
     q = paper_query()

@@ -1,0 +1,283 @@
+"""TableRegistry epoch/mutation semantics and the invalidation surface it
+drives: PlanCache.invalidate_table, ImputeStore.invalidate, ResultCache
+epoch keying, and the shared env_flag parser."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.env import env_flag
+from repro.core.relation import MaskedRelation
+from repro.core.schema import ColumnSpec, Schema
+from repro.imputers.base import ImputationService, Imputer, ImputeStore
+from repro.service import PlanCache, ResultCache, TableRegistry
+from repro.service.plan_cache import query_signature
+from test_quip_correctness import _build_instance
+from test_service import _query
+
+
+def _registry(seed=11, rows=64):
+    rng = np.random.default_rng(seed)
+    tables, _clean, truth = _build_instance(rng, 2, rows, 0.3, 6)
+    return TableRegistry({t: r.copy() for t, r in tables.items()}), truth
+
+
+# --------------------------------------------------------------------------- #
+# Mapping interface + epochs
+# --------------------------------------------------------------------------- #
+def test_registry_is_a_mapping():
+    reg, _ = _registry()
+    assert set(reg) == {"R0", "R1"}
+    assert len(reg) == 2 and "R0" in reg
+    assert isinstance(reg["R0"], MaskedRelation)
+    assert {t: r.num_rows for t, r in reg.items()} == {"R0": 64, "R1": 64}
+    # a drop-in for the plain dict every engine call site takes
+    assert dict(reg) == {t: reg[t] for t in reg}
+
+
+def test_epochs_bump_per_table_and_globally():
+    reg, _ = _registry()
+    assert reg.global_epoch == 0 and reg.epochs(("R0", "R1")) == (0, 0)
+    reg.update_rows("R0", np.array([0]), {"R0.v": np.array([3])})
+    assert reg.epoch("R0") == 1 and reg.epoch("R1") == 0
+    assert reg.global_epoch == 1
+    reg.delete_rows("R1", np.array([5]))
+    assert reg.epochs(("R0", "R1")) == (1, 1) and reg.global_epoch == 2
+
+
+# --------------------------------------------------------------------------- #
+# mutation semantics
+# --------------------------------------------------------------------------- #
+def test_update_rows_is_copy_on_write_and_clears_missing():
+    reg, _ = _registry()
+    snapshot = reg["R0"]
+    before = snapshot.values("R0.v").copy()
+    rows = np.nonzero(snapshot.is_missing("R0.v"))[0][:2]
+    reg.update_rows("R0", rows, {"R0.v": np.array([7, 8])})
+    # the snapshot an in-flight session holds is untouched
+    assert snapshot is not reg["R0"]
+    np.testing.assert_array_equal(snapshot.values("R0.v"), before)
+    # the registry's table has the new values, and they are known now
+    np.testing.assert_array_equal(reg["R0"].values("R0.v")[rows], [7, 8])
+    assert not reg["R0"].is_missing("R0.v")[rows].any()
+
+
+def test_delete_rows_rebuilds_canonically():
+    reg, _ = _registry()
+    reg.delete_rows("R0", np.array([0, 3, 63]))
+    rel = reg["R0"]
+    assert rel.num_rows == 61
+    # tids re-indexed: dense imputation caches line up at the new size
+    np.testing.assert_array_equal(rel.tids["R0"], np.arange(61))
+
+
+def test_insert_rows_appends_with_missing_marks():
+    reg, _ = _registry()
+    cols = {a: np.zeros(3, dtype=np.int64) for a in reg["R0"].column_names()}
+    reg.insert_rows("R0", cols, missing={"R0.v": np.array([True, False,
+                                                           True])})
+    rel = reg["R0"]
+    assert rel.num_rows == 67
+    np.testing.assert_array_equal(rel.is_missing("R0.v")[64:],
+                                  [True, False, True])
+    np.testing.assert_array_equal(rel.tids["R0"], np.arange(67))
+
+
+def test_replace_table_swaps_whole_relation():
+    reg, _ = _registry()
+    schema = reg["R1"].schema
+    tiny = MaskedRelation.from_columns(
+        schema, {c.name: np.zeros(2, dtype=np.int64) for c in schema.columns},
+        base_table="R1",
+    )
+    reg.replace_table("R1", tiny)
+    assert reg["R1"].num_rows == 2 and reg.epoch("R1") == 1
+
+
+def test_invalid_mutations_fail_loud_without_bumping_epochs():
+    reg, _ = _registry()
+    with pytest.raises(KeyError):
+        reg.update_rows("NOPE", np.array([0]), {"x": np.array([1])})
+    with pytest.raises(IndexError):
+        reg.delete_rows("R0", np.array([64]))
+    with pytest.raises(ValueError):
+        reg.update_rows("R0", np.array([0, 1]), {"R0.v": np.array([1])})
+    with pytest.raises(ValueError):  # ragged / missing-column inserts
+        reg.insert_rows("R0", {"R0.v": np.array([1])})
+    with pytest.raises(ValueError, match="missing mask"):  # mis-sized mask
+        reg.insert_rows(
+            "R0",
+            {a: np.zeros(3, dtype=np.int64)
+             for a in reg["R0"].column_names()},
+            missing={"R0.v": np.array([True])},
+        )
+    assert reg.global_epoch == 0  # nothing committed
+
+
+def test_subscriber_before_hook_vetoes_pre_commit():
+    reg, _ = _registry()
+    seen = []
+
+    def veto(table):
+        raise RuntimeError("busy")
+
+    reg.subscribe(seen.append, before=veto)
+    with pytest.raises(RuntimeError, match="busy"):
+        reg.delete_rows("R0", np.array([0]))
+    assert reg.global_epoch == 0 and reg["R0"].num_rows == 64
+    assert seen == []  # post-commit hook never ran
+
+
+def test_subscriber_observes_committed_state():
+    reg, _ = _registry()
+    observed = []
+    reg.subscribe(
+        lambda table: observed.append((table, reg.epoch(table),
+                                       reg[table].num_rows))
+    )
+    reg.delete_rows("R0", np.array([0, 1]))
+    assert observed == [("R0", 1, 62)]
+
+
+def test_unsubscribe_detaches_hooks():
+    """A service discarded while the registry lives on must be able to
+    detach (QuipService.close) — its hooks, including the shared-impute
+    veto, stop firing."""
+    from test_quip_correctness import GroundTruthImputer
+    from repro.service import QuipService
+
+    reg, truth = _registry()
+    svc = QuipService(reg, lambda: GroundTruthImputer(truth),
+                      shared_impute=True, morsel_rows=8)
+    events = []
+    reg.subscribe(lambda table: events.append(table))
+    svc.close()
+    # with the dead service detached, its in-flight veto no longer applies
+    # and its invalidation hook no longer fires
+    reg.delete_rows("R0", np.array([0]))
+    assert events == ["R0"]
+    assert svc.serving.invalidation_events == 0
+    assert reg.global_epoch == 1
+
+
+# --------------------------------------------------------------------------- #
+# PlanCache invalidation
+# --------------------------------------------------------------------------- #
+def test_plan_cache_invalidate_table_is_selective():
+    reg, _ = _registry()
+    cache = PlanCache()
+    from repro.core.plan import Query
+
+    q_join = _query(2)  # reads R0 and R1
+    q_r1 = Query(("R1",), (), (), ("R1.v",))
+    cache.get(q_join, reg)
+    cache.get(q_r1, reg)
+    assert len(cache) == 2
+    assert cache.invalidate_table("R0") == 1  # only the join plan depends
+    assert len(cache) == 1
+    _plan, hit = cache.get(q_r1, reg)
+    assert hit  # the R1-only plan survived
+    _plan, hit = cache.get(q_join, reg)
+    assert not hit  # the dependent plan was evicted → re-planned
+    assert cache.stats()["invalidations"] == 1
+
+
+# --------------------------------------------------------------------------- #
+# ImputeStore invalidation
+# --------------------------------------------------------------------------- #
+class CountingImputer(Imputer):
+    blocking = True
+
+    def __init__(self):
+        self.fits = 0
+
+    def fit(self, table):
+        self.fits += 1
+
+    def impute_attr(self, table, attr, tids):
+        return np.zeros(len(tids))
+
+
+def test_impute_store_invalidate_drops_cells_and_models():
+    reg, truth = _registry()
+    store = ImputeStore(reg)
+    svc = ImputationService(reg, default=CountingImputer, store=store)
+    svc.impute("R0", "R0.v", np.array([0, 1, 2]))
+    svc.impute("R1", "R1.v", np.array([4]))
+    assert store.filled_cells() == 4
+    dropped = store.invalidate("R0")
+    assert dropped == 3
+    assert store.filled_cells() == 1  # R1 cells untouched
+    # caches rebuild at the mutated table's new row count
+    reg.delete_rows("R0", np.arange(10))
+    values, filled = store.column_cache("R0", "R0.v")
+    assert len(values) == 54 and not filled.any()
+    # the model was dropped too: next impute refits on the new table
+    before = svc.counters.imputations
+    svc.impute("R0", "R0.v", np.array([0]))
+    assert svc.counters.imputations == before + 1
+
+
+def test_invalidate_unrelated_table_is_a_noop():
+    reg, _ = _registry()
+    store = ImputeStore(reg)
+    svc = ImputationService(reg, default=CountingImputer, store=store)
+    svc.impute("R0", "R0.v", np.array([0, 1]))
+    assert store.invalidate("R1") == 0
+    assert store.filled_cells() == 2
+
+
+# --------------------------------------------------------------------------- #
+# ResultCache
+# --------------------------------------------------------------------------- #
+def _key(query, epochs, planner="imputedb"):
+    return (query_signature(query, planner), ("adaptive",), tuple(epochs))
+
+
+def test_result_cache_epoch_keying_and_lru():
+    cache = ResultCache(capacity=2)
+    qa, qb, qc = _query(1), _query(2), _query(3)
+    assert cache.get(_key(qa, (0, 0))) is None  # miss
+    cache.put(_key(qa, (0, 0)), "ans-a")
+    cache.put(_key(qb, (0, 0)), "ans-b")
+    assert cache.get(_key(qa, (0, 0))) == "ans-a"
+    # same signature at a bumped epoch is a different key → miss
+    assert cache.get(_key(qa, (1, 0))) is None
+    cache.put(_key(qc, (0, 0)), "ans-c")  # evicts LRU (qb)
+    assert cache.evictions == 1
+    assert cache.get(_key(qb, (0, 0))) is None
+    assert cache.stats()["size"] == 2
+
+
+def test_result_cache_invalidate_table_purges_dependents():
+    cache = ResultCache()
+    from repro.core.plan import Query
+
+    q_join = _query(2)  # reads R0, R1
+    q_r1 = Query(("R1",), (), (), ("R1.v",))
+    cache.put(_key(q_join, (0, 0)), "join")
+    cache.put((query_signature(q_r1), ("adaptive",), (0,)), "r1-only")
+    assert cache.invalidate_table("R0") == 1
+    assert len(cache) == 1
+    assert cache.get((query_signature(q_r1), ("adaptive",), (0,))) \
+        == "r1-only"
+
+
+# --------------------------------------------------------------------------- #
+# env_flag (shared gate parser)
+# --------------------------------------------------------------------------- #
+def test_env_flag_spellings(monkeypatch):
+    for raw in ("1", "true", "Yes", "ON", " true "):
+        monkeypatch.setenv("QUIP_TEST_FLAG", raw)
+        assert env_flag("QUIP_TEST_FLAG", False) is True
+    for raw in ("0", "false", "No", "OFF"):
+        monkeypatch.setenv("QUIP_TEST_FLAG", raw)
+        assert env_flag("QUIP_TEST_FLAG", True) is False
+    monkeypatch.delenv("QUIP_TEST_FLAG", raising=False)
+    assert env_flag("QUIP_TEST_FLAG", True) is True
+    monkeypatch.setenv("QUIP_TEST_FLAG", "")
+    assert env_flag("QUIP_TEST_FLAG", False) is False  # empty = unset
+    monkeypatch.setenv("QUIP_TEST_FLAG", "maybe")
+    with pytest.raises(ValueError, match="QUIP_TEST_FLAG"):
+        env_flag("QUIP_TEST_FLAG", False)

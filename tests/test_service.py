@@ -12,11 +12,13 @@ import pytest
 from repro.core.executor import execute_offline, execute_quip
 from repro.core.plan import Query
 from repro.core.predicates import JoinPredicate, SelectionPredicate
+from repro.core.stats import nearest_rank_quantile
 from repro.imputers.base import ImputationService, Imputer
 from repro.service import (
     MorselScheduler,
     PlanCache,
     QuipService,
+    TableRegistry,
     query_signature,
     resolve_shared_impute,
 )
@@ -183,6 +185,31 @@ def test_shared_impute_env_gate(monkeypatch):
     assert _service(tables, truth, shared=None).shared_impute
     monkeypatch.setenv("QUIP_SHARED_IMPUTE", "0")
     assert not _service(tables, truth, shared=None).shared_impute
+
+
+def test_shared_impute_env_gate_accepts_common_spellings(monkeypatch):
+    """Regression: ``QUIP_SHARED_IMPUTE=true`` / ``yes`` used to silently
+    disable sharing (only the literal "1" enabled it); garbage now raises
+    instead of silently meaning off."""
+    for raw in ("true", "yes", "ON"):
+        monkeypatch.setenv("QUIP_SHARED_IMPUTE", raw)
+        assert resolve_shared_impute(None)
+    for raw in ("false", "no", "off"):
+        monkeypatch.setenv("QUIP_SHARED_IMPUTE", raw)
+        assert not resolve_shared_impute(None)
+    monkeypatch.setenv("QUIP_SHARED_IMPUTE", "enable")
+    with pytest.raises(ValueError, match="QUIP_SHARED_IMPUTE"):
+        resolve_shared_impute(None)
+    # QUIP_IMPUTE_BATCH goes through the same parser
+    from repro.imputers.base import _resolve_batching
+
+    monkeypatch.setenv("QUIP_IMPUTE_BATCH", "no")
+    assert not _resolve_batching(None)
+    monkeypatch.setenv("QUIP_IMPUTE_BATCH", "yes")
+    assert _resolve_batching(None)
+    monkeypatch.setenv("QUIP_IMPUTE_BATCH", "2")
+    with pytest.raises(ValueError, match="QUIP_IMPUTE_BATCH"):
+        _resolve_batching(None)
 
 
 def test_shared_store_flush_guard():
@@ -397,6 +424,226 @@ def test_serving_workload_skewed_stream():
         [query_signature(q) for _t, q in again]
 
 
+def test_mutating_workload_stream():
+    """Deterministic query/mutation interleaving whose mutations apply
+    cleanly against a TableRegistry (row ids stay valid as deletes
+    shrink tables)."""
+    from repro.data.queries import mutating_workload
+    from repro.data.synthetic import wifi_dataset
+
+    tables, _ = wifi_dataset(n_users=50, n_wifi=300, n_occ=150)
+    events = list(mutating_workload("wifi", tables, n_queries=20,
+                                    mutate_every=4, n_templates=5, seed=3))
+    kinds = Counter(e[0] for e in events)
+    assert kinds["query"] == 20 and kinds["mutate"] >= 4
+    muts = [e[1] for e in events if e[0] == "mutate"]
+    assert {m.kind for m in muts} == {"update_rows", "delete_rows"}
+    again = list(mutating_workload("wifi", tables, n_queries=20,
+                                   mutate_every=4, n_templates=5, seed=3))
+    assert muts == [e[1] for e in again if e[0] == "mutate"]
+    reg = TableRegistry({t: r.copy() for t, r in tables.items()})
+    for e in events:
+        if e[0] == "mutate":
+            e[1].apply(reg)
+    assert reg.global_epoch == kinds["mutate"]
+
+
 def test_scheduler_drain_empty():
     sched = MorselScheduler()
     assert sched.drain() == [] and sched.running == 0
+
+
+# --------------------------------------------------------------------------- #
+# result cache (epoch-keyed answer reuse)
+# --------------------------------------------------------------------------- #
+def test_result_cache_hit_skips_execution():
+    """A repeated signature submitted after the first completed must be
+    answered from the cache: done immediately, same answers, zero new
+    relational work."""
+    tables, _clean, truth = _instance()
+    svc = _service(tables, truth)
+    first = svc.answers(svc.submit(_query(2)))
+    imputations_before = svc.serving.total_counters().imputations
+    t2 = svc.submit(_query(2))
+    assert svc.poll(t2) == "done"  # no scheduling needed
+    assert svc.answers(t2) == first
+    total = svc.serving.total_counters()
+    assert total.imputations == imputations_before  # no work re-ran
+    summary = svc.summary()
+    assert summary["result_cache_hits"] == 1
+    assert summary["queries_result_cache_hit"] == 1
+    # the hit never consulted the planner
+    assert svc.plan_cache.hits == 0 and svc.plan_cache.misses == 1
+
+
+def test_result_cache_respects_exec_knobs():
+    """Same signature under a different strategy is a different key."""
+    tables, _clean, truth = _instance()
+    svc = _service(tables, truth)
+    a = svc.answers(svc.submit(_query(2), strategy="lazy"))
+    b = svc.answers(svc.submit(_query(2), strategy="eager"))
+    assert Counter(a) == Counter(b)
+    assert svc.summary()["result_cache_hits"] == 0
+
+
+def test_result_cache_disabled_with_size_zero():
+    tables, _clean, truth = _instance()
+    svc = _service(tables, truth, result_cache_size=0)
+    svc.answers(svc.submit(_query(2)))
+    svc.answers(svc.submit(_query(2)))
+    assert svc.result_cache is None
+    assert "result_cache_hits" not in svc.summary()
+    assert svc.plan_cache.hits == 1  # plans still shared
+
+
+# --------------------------------------------------------------------------- #
+# registry mutation: epochs + invalidation across every cache
+# --------------------------------------------------------------------------- #
+def test_mutation_invalidates_result_and_plan_caches():
+    tables, _clean, truth = _instance()
+    reg = TableRegistry({t: r.copy() for t, r in tables.items()})
+    svc = _service(reg, truth)
+    stale = svc.answers(svc.submit(_query(2)))
+    assert len(svc.plan_cache) == 1 and len(svc.result_cache) == 1
+    # flip every R0.v to 0: the <=2 selection now passes all R0 rows
+    reg.update_rows("R0", np.arange(64),
+                    {"R0.v": np.zeros(64, dtype=np.int64)})
+    assert len(svc.plan_cache) == 0 and len(svc.result_cache) == 0
+    fresh = svc.answers(svc.submit(_query(2)))
+    assert fresh != stale  # the mutation is visible, not the cached answer
+    cold = _service({t: reg[t].copy() for t in reg}, truth,
+                    result_cache_size=0)
+    assert Counter(fresh) == Counter(cold.answers(cold.submit(_query(2))))
+    summary = svc.summary()
+    assert summary["invalidation_events"] == 1
+    assert summary["plans_invalidated"] == 1
+    assert summary["results_invalidated"] == 1
+    assert summary["registry_epoch"] == 1
+    assert summary["result_cache_hits"] == 0
+
+
+MUTATIONS = [
+    lambda reg: reg.update_rows(
+        "R0", np.array([0, 3, 5]),
+        {"R0.v": np.array([1, 2, 0], dtype=np.int64)}),
+    lambda reg: reg.delete_rows("R1", np.array([2, 7, 11])),
+    lambda reg: reg.update_rows(
+        "R1", np.array([1, 4]), {"R1.k1": np.array([0, 3],
+                                                   dtype=np.int64)}),
+    lambda reg: reg.delete_rows("R0", np.array([0, 1, 2])),
+]
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("shared", [False, True])
+def test_mutation_equivalence_vs_cold_service(strategy, shared):
+    """The tentpole acceptance invariant: after every mutation epoch, a
+    long-lived service (plan cache + result cache + optionally shared
+    impute store) answers bit-identically to a cold QuipService built on
+    the post-mutation registry — no stale plan, imputation, or cached
+    answer leaks.  The repeated signature in the round exercises the
+    result cache within each epoch."""
+    tables, _clean, truth = _instance()
+    reg = TableRegistry({t: r.copy() for t, r in tables.items()})
+    svc = _service(reg, truth, strategy=strategy, shared=shared)
+    rounds = [_query(2), _query(4), _query(2)]  # repeat → cache hit
+    for mutate in [None] + MUTATIONS:
+        if mutate is not None:
+            mutate(reg)
+        got = [Counter(svc.answers(svc.submit(q))) for q in rounds]
+        cold = _service({t: reg[t].copy() for t in reg}, truth,
+                        strategy=strategy, shared=False,
+                        result_cache_size=0)
+        want = [Counter(cold.answers(cold.submit(q))) for q in rounds]
+        assert got == want
+    assert reg.global_epoch == len(MUTATIONS)
+    assert svc.summary()["invalidation_events"] == len(MUTATIONS)
+    if shared:
+        # mutations dropped affected store cells along the way
+        assert svc.serving.store_cells_invalidated > 0
+
+
+def test_shared_store_mutation_vetoed_while_inflight():
+    """Mutating a table that running shared-impute sessions read would mix
+    epochs inside one query — the registry's before-hook must refuse,
+    committing nothing; after draining, the mutation goes through."""
+    tables, _clean, truth = _instance()
+    reg = TableRegistry({t: r.copy() for t, r in tables.items()})
+    svc = _service(reg, truth, shared=True)
+    svc.submit(_query(2))  # admitted → RUNNING in the scheduler ring
+    with pytest.raises(RuntimeError, match="drain"):
+        reg.delete_rows("R0", np.array([0]))
+    assert reg.global_epoch == 0 and reg["R0"].num_rows == 64
+    svc.run_until_idle()
+    reg.delete_rows("R0", np.array([0]))
+    assert reg.global_epoch == 1
+
+
+def test_isolated_sessions_keep_their_admission_snapshot():
+    """Without a shared store, mutations during a query's run don't disturb
+    it: admitted sessions own point-in-time table copies."""
+    tables, _clean, truth = _instance()
+    reg = TableRegistry({t: r.copy() for t, r in tables.items()})
+    svc = _service(reg, truth, shared=False)
+    want = svc.answers(svc.submit(_query(2)))  # pre-mutation answer
+    t2 = svc.submit(_query(2), strategy="eager")  # admitted: snapshot taken
+    for _ in range(3):
+        svc.step()
+    reg.update_rows("R0", np.arange(64),
+                    {"R0.v": np.zeros(64, dtype=np.int64)})
+    assert Counter(svc.answers(t2)) == Counter(want)
+    rec = svc.serving.records[-1]
+    assert not rec.failed
+
+
+# --------------------------------------------------------------------------- #
+# failed admission under pressure (regression: no QueryRecord landed)
+# --------------------------------------------------------------------------- #
+def test_failed_admission_reclaims_slot_and_records():
+    """A query that fails inside start() (unknown table → plan error) never
+    enters the ring; the admission slot must be reclaimed so the queue
+    behind it drains, poll() must say failed, and a QueryRecord must land
+    in ServingStats."""
+    tables, _clean, truth = _instance()
+    svc = _service(tables, truth, inflight=1, result_cache_size=0)
+    good1 = svc.submit(_query(4))
+    bad = svc.submit(Query(("NOPE",), (), (), ("NOPE.v",)))
+    good2 = svc.submit(_query(3))
+    assert svc.poll(bad) == "queued"  # stuck behind good1 (max_inflight=1)
+    svc.run_until_idle()
+    assert svc.poll(bad) == "failed"
+    assert svc.poll(good1) == "done" and svc.poll(good2) == "done"
+    with pytest.raises(KeyError):
+        svc.result(bad)
+    # the failure is telemetry, not a silent drop
+    records = {r.ticket: r for r in svc.serving.records}
+    assert set(records) == {good1, bad, good2}
+    assert records[bad].failed and not records[good1].failed
+    summary = svc.summary()
+    assert summary["queries"] == 3 and summary["failed"] == 1
+
+
+def test_failed_admission_immediate_when_slot_free():
+    tables, _clean, truth = _instance()
+    svc = _service(tables, truth)
+    bad = svc.submit(Query(("NOPE",), (), (), ("NOPE.v",)))
+    assert svc.poll(bad) == "failed"  # admission ran setup synchronously
+    assert svc.serving.records[-1].failed
+
+
+# --------------------------------------------------------------------------- #
+# nearest-rank quantile (regression: banker's-rounded index)
+# --------------------------------------------------------------------------- #
+def test_nearest_rank_quantile_small_n():
+    """p50 of 4 values is the 2nd order statistic (ceil(0.5·4) = 2); the
+    old round(q·(n-1)) returned the 3rd."""
+    assert nearest_rank_quantile([1.0, 2.0, 3.0, 4.0], 0.5) == 2.0
+    assert nearest_rank_quantile([4.0, 1.0, 3.0, 2.0], 0.5) == 2.0
+    assert nearest_rank_quantile([1.0, 2.0], 0.5) == 1.0
+    assert nearest_rank_quantile([7.0], 0.95) == 7.0
+    assert nearest_rank_quantile([], 0.5) == 0.0
+    values = [float(i) for i in range(1, 21)]
+    # p95 of 20 values: ceil(0.95·20) = 19th order statistic
+    assert nearest_rank_quantile(values, 0.95) == 19.0
+    assert nearest_rank_quantile(values, 0.0) == 1.0
+    assert nearest_rank_quantile(values, 1.0) == 20.0
