@@ -1,0 +1,181 @@
+"""Experiment 10: per-tenant QoS scheduling under an aggressor tenant.
+
+One skewed two-tenant stream (tenant 0 floods most of the queries, tenant 1
+is the low-traffic victim), executed under four serving configurations that
+differ ONLY in scheduling/admission policy:
+
+* ``rr``        — the pre-QoS FIFO ring: the aggressor gets one ring slot
+  per flooded session, so its morsel share grows with its flood;
+* ``rr_quota``  — round-robin plus a per-tenant admission quota capping the
+  aggressor's concurrently admitted sessions;
+* ``wfq``       — weighted fair queueing over tenants (equal weights): the
+  per-tenant morsel share is pinned at the weight ratio no matter how many
+  sessions the aggressor floods;
+* ``deadline``  — earliest-deadline-first with a deadline class on the
+  victim tenant (sized from a probe of its own per-query step counts).
+
+All runs use the scheduler's ``unit`` cost model, so every fairness metric
+below is **deterministic step accounting** — scheduler-clock steps, not
+wall-clock — and the acceptance asserts in :func:`derived` cannot flake on
+machine load:
+
+* every policy's answers are bit-identical to cold serial replay;
+* the victim's morsel-share deficit shrinks under wfq vs round-robin;
+* the victim's p95 turnaround (admission → completion, in steps) improves;
+* the victim's deadline hit-rate under the deadline policy is at least its
+  round-robin hit-rate.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from benchmarks.common import IMPUTER_FACTORIES
+from repro.core.executor import execute_quip
+from repro.data.queries import serving_workload
+from repro.data.synthetic import wifi_dataset
+from repro.imputers.base import ImputationService
+from repro.service import QuipService
+
+NAME = "exp10_qos"
+
+STRATEGY = "adaptive"
+MORSEL_ROWS = 16  # small morsels: many scheduler steps per query
+MAX_INFLIGHT = 6
+AGGRESSOR, VICTIM = 0, 1  # zipf rank 1 floods; rank 2 is the victim
+
+
+def _serial_answers(stream, tables, imputer) -> List[list]:
+    answers = []
+    for _tenant, q in stream:
+        eng = ImputationService(
+            {t: tables[t].copy() for t in q.tables},
+            default=IMPUTER_FACTORIES[imputer],
+        )
+        res = execute_quip(q, tables, eng, strategy=STRATEGY,
+                           morsel_rows=MORSEL_ROWS)
+        answers.append(sorted(res.answer_tuples()))
+    return answers
+
+
+def _run_policy(stream, tables, imputer, mode: str,
+                victim_deadline: float) -> Dict:
+    policy = {"rr": "rr", "rr_quota": "rr", "wfq": "wfq",
+              "deadline": "deadline"}[mode]
+    svc = QuipService(
+        tables, IMPUTER_FACTORIES[imputer], strategy=STRATEGY,
+        morsel_rows=MORSEL_ROWS, shared_impute=False,
+        max_inflight=MAX_INFLIGHT,
+        result_cache_size=0,  # every repeat re-executes: pure scheduling
+        scheduler_policy=policy,
+        cost_model="unit",  # deterministic step accounting, no wall clock
+        tenant_deadlines={VICTIM: victim_deadline},
+        tenant_quotas={AGGRESSOR: 2} if mode == "rr_quota" else None,
+    )
+    t0 = time.perf_counter()
+    tickets = [svc.submit(q, tenant=tenant) for tenant, q in stream]
+    svc.run_until_idle()
+    wall = time.perf_counter() - t0
+    answers = [sorted(svc.answers(t)) for t in tickets]
+    ts = svc.tenant_summary()
+    victim_recs = [r for r in svc.serving.records if r.tenant == VICTIM]
+    # residency share: of the scheduler steps that elapsed while a victim
+    # query was in the system (admission → completion), how many did that
+    # query get?  1/2 is the two-tenant fair share; round-robin under an
+    # aggressor flood of k sessions degrades it toward 1/(k+1).  Clock
+    # units == steps under the unit model, so this is deterministic.
+    victim_share = sum(
+        r.steps / r.turnaround_cost for r in victim_recs
+    ) / len(victim_recs)
+    return {
+        "mode": mode,
+        "queries": len(stream),
+        "victim_queries": len(victim_recs),
+        "wall_s": round(wall, 4),
+        "total_steps": int(svc.summary()["morsel_steps"]),
+        "victim_steps": int(ts[VICTIM]["steps"]),
+        "victim_share": round(victim_share, 4),
+        "victim_p95_turnaround_steps": round(
+            ts[VICTIM]["p95_turnaround_cost"], 1
+        ),
+        "victim_deadline_hit_rate": ts[VICTIM]["deadline_hit_rate"],
+        "aggressor_share": round(ts[AGGRESSOR]["cost_share"], 4),
+        "_answers": answers,
+    }
+
+
+def run(fast: bool = True) -> List[Dict]:
+    if fast:
+        tables, _ = wifi_dataset(n_users=120, n_wifi=1500, n_occ=800)
+        n_queries = 30
+    else:
+        tables, _ = wifi_dataset()
+        n_queries = 60
+    imputer = "knn"
+    stream = list(serving_workload(
+        "wifi", tables, n_queries=n_queries, n_templates=6,
+        n_tenants=2, seed=5, tenant_skew=1.8,
+    ))
+    serial = _serial_answers(stream, tables, imputer)
+
+    # probe: the victim's own per-query step counts under round-robin size
+    # its deadline class — generous vs its own work, tight vs queueing
+    # behind the aggressor's flood
+    probe = _run_policy(stream, tables, imputer, "rr",
+                        victim_deadline=float("inf"))
+    mean_steps = probe["victim_steps"] / max(probe["victim_queries"], 1)
+    victim_deadline = 1.5 * mean_steps
+
+    rows = [
+        _run_policy(stream, tables, imputer, mode, victim_deadline)
+        for mode in ("rr", "rr_quota", "wfq", "deadline")
+    ]
+    for r in rows:
+        r["answers_match_serial"] = int(r.pop("_answers") == serial)
+        r["victim_deadline_steps"] = round(victim_deadline, 1)
+    return rows
+
+
+def derived(rows: List[Dict]) -> Dict[str, float]:
+    by_mode = {r["mode"]: r for r in rows}
+    rr = by_mode["rr"]
+    quota = by_mode["rr_quota"]
+    wfq = by_mode["wfq"]
+    deadline = by_mode["deadline"]
+    # acceptance invariants (CI runs this experiment as a smoke check);
+    # every metric here is deterministic step accounting, not wall-clock
+    for r in rows:
+        assert r["answers_match_serial"] == 1, (
+            f"{r['mode']} answers diverged from serial replay"
+        )
+    assert wfq["victim_share"] > rr["victim_share"], (
+        "weighted-fair did not improve the victim's morsel-step share "
+        f"({wfq['victim_share']} <= {rr['victim_share']})"
+    )
+    assert (wfq["victim_p95_turnaround_steps"]
+            < rr["victim_p95_turnaround_steps"]), (
+        "weighted-fair did not improve the victim's p95 turnaround"
+    )
+    assert (deadline["victim_deadline_hit_rate"]
+            >= rr["victim_deadline_hit_rate"]), (
+        "deadline policy hit fewer victim deadlines than round-robin"
+    )
+    fair = 0.5  # two tenants, equal weights
+    return {
+        "qos_victim_share_rr": rr["victim_share"],
+        "qos_victim_share_rr_quota": quota["victim_share"],
+        "qos_victim_share_wfq": wfq["victim_share"],
+        "qos_victim_share_deficit_rr": round(
+            max(0.0, fair - rr["victim_share"]), 4
+        ),
+        "qos_victim_share_deficit_wfq": round(
+            max(0.0, fair - wfq["victim_share"]), 4
+        ),
+        "qos_victim_p95_turnaround_rr": rr["victim_p95_turnaround_steps"],
+        "qos_victim_p95_turnaround_wfq": wfq["victim_p95_turnaround_steps"],
+        "qos_deadline_hit_rate_rr": rr["victim_deadline_hit_rate"],
+        "qos_deadline_hit_rate_deadline":
+            deadline["victim_deadline_hit_rate"],
+        "qos_answers_match": 1.0,
+    }

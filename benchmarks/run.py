@@ -23,6 +23,7 @@ from benchmarks import (
     exp7_query_baseline,
     exp8_serving,
     exp9_result_cache,
+    exp10_qos,
     kernels_micro,
 )
 
@@ -36,6 +37,7 @@ MODULES = [
     exp7_query_baseline,
     exp8_serving,
     exp9_result_cache,
+    exp10_qos,
     kernels_micro,
 ]
 

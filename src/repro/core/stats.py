@@ -187,6 +187,18 @@ class QueryRecord:
     counters: ExecutionCounters
     result_cache_hit: bool = False
     failed: bool = False
+    # -- QoS scheduling accounting (see service/scheduler.py) ----------- #
+    steps: int = 0  # morsel steps the scheduler granted
+    sched_cost: float = 0.0  # cost charged under the scheduler's model
+    admit_clock: float = 0.0  # scheduler clock at admission
+    finish_clock: float = 0.0  # scheduler clock at completion
+    deadline_met: Optional[bool] = None  # None: no deadline class
+
+    @property
+    def turnaround_cost(self) -> float:
+        """Admission → completion on the scheduler's cost clock (steps
+        under the ``unit`` model — wall-clock-free p95s)."""
+        return max(0.0, self.finish_clock - self.admit_clock)
 
     def as_dict(self) -> Dict[str, object]:
         d = dataclasses.asdict(self)
@@ -232,6 +244,44 @@ class ServingStats:
         """Latency quantile in seconds over finished queries (0 if none)."""
         return nearest_rank_quantile([r.latency_s for r in self.records], q)
 
+    def tenant_summary(self) -> Dict[Optional[int], Dict[str, float]]:
+        """Per-tenant QoS view over the finished-query records.
+
+        ``cost_share`` is the tenant's fraction of all scheduler-charged
+        morsel cost (deterministic step shares under the ``unit`` cost
+        model); ``p95_turnaround_cost`` is admission → completion on the
+        same clock; ``deadline_hit_rate`` aggregates only queries that
+        carried a deadline class (None when no query of the tenant did)."""
+        by_tenant: Dict[Optional[int], List[QueryRecord]] = defaultdict(list)
+        for r in self.records:
+            by_tenant[r.tenant].append(r)
+        total_cost = sum(r.sched_cost for r in self.records)
+        out: Dict[Optional[int], Dict[str, float]] = {}
+        for tenant, recs in by_tenant.items():
+            latencies = [r.latency_s for r in recs]
+            turnarounds = [r.turnaround_cost for r in recs if r.steps]
+            deadlined = [r for r in recs if r.deadline_met is not None]
+            cost = sum(r.sched_cost for r in recs)
+            out[tenant] = {
+                "queries": len(recs),
+                "failed": sum(1 for r in recs if r.failed),
+                "p50_latency_s": nearest_rank_quantile(latencies, 0.50),
+                "p95_latency_s": nearest_rank_quantile(latencies, 0.95),
+                "queue_wait_s": sum(r.queue_wait_s for r in recs),
+                "steps": sum(r.steps for r in recs),
+                "sched_cost": cost,
+                "cost_share": cost / total_cost if total_cost > 0 else 0.0,
+                "p95_turnaround_cost": nearest_rank_quantile(
+                    turnarounds, 0.95
+                ),
+                "deadline_hit_rate": (
+                    sum(1 for r in deadlined if r.deadline_met)
+                    / len(deadlined)
+                    if deadlined else None
+                ),
+            }
+        return out
+
     def total_counters(self) -> ExecutionCounters:
         if not self.records:
             return ExecutionCounters()
@@ -247,6 +297,11 @@ class ServingStats:
         return {
             "queries": len(self.records),
             "failed": sum(1 for r in self.records if r.failed),
+            "tenants": len({r.tenant for r in self.records}),
+            "morsel_steps": sum(r.steps for r in self.records),
+            "sched_cost": round(
+                sum(r.sched_cost for r in self.records), 6
+            ),
             "p50_latency_s": round(self.latency_quantile(0.50), 6),
             "p95_latency_s": round(self.latency_quantile(0.95), 6),
             "queue_wait_s": round(sum(r.queue_wait_s for r in self.records), 6),

@@ -120,6 +120,12 @@ def workload(
     return queries
 
 
+def _zipf_probs(n: int, skew: float) -> np.ndarray:
+    ranks = np.arange(1, n + 1, dtype=np.float64)
+    probs = ranks ** -float(skew)
+    return probs / probs.sum()
+
+
 def serving_workload(
     dataset: str,
     tables: Dict[str, MaskedRelation],
@@ -129,6 +135,8 @@ def serving_workload(
     skew: float = 1.1,
     kind: str = "random",
     seed: int = 0,
+    tenant_skew: Optional[float] = None,
+    tenant_mix: Optional[Dict[int, Tuple[int, ...]]] = None,
 ):
     """Skewed multi-tenant query stream for the QuipService serving layer.
 
@@ -136,20 +144,72 @@ def serving_workload(
     from a pool of ``n_templates`` templates under a Zipf-like distribution
     with exponent ``skew`` — hot templates recur, so a serving engine sees
     plan-cache hits and overlapping imputation requests, the two kinds of
-    cross-query sharing QUIP's serving layer amortizes.  Tenants are drawn
-    uniformly and are labels only (admission/fairness experiments); two
-    tenants issuing the same template share plan and imputation state.
+    cross-query sharing QUIP's serving layer amortizes.  Two tenants
+    issuing the same template share plan and imputation state.
+
+    Tenants default to uniform draws (labels only).  For QoS/fairness
+    experiments:
+
+    * ``tenant_skew`` — Zipf exponent over tenant ids: tenant 0 becomes
+      the heavy "aggressor" issuing most of the stream while the high
+      ranks are low-traffic "victims" (exp10's scenario);
+    * ``tenant_mix`` — per-tenant template pools (tenant → tuple of
+      template indices): each tenant draws only from its pool, with the
+      global Zipf weights renormalized over it, so e.g. an aggressor can
+      be pinned to the expensive multi-join templates while a victim runs
+      cheap scans.  Tenants absent from the mix use the full pool.
+
+    Both default to off, and the default stream is **byte-identical** to
+    the pre-QoS generator for a fixed seed (regression-tested) — the
+    legacy draw order is preserved exactly when neither knob is set.
+
+    A misconfigured ``tenant_mix`` raises at *call* time (this is an
+    eager wrapper around the generator), not at first iteration.
     """
+    probs = _zipf_probs(n_templates, skew)
+    mix_probs = {}  # tenant -> (pool array, renormalized zipf weights)
+    if tenant_mix:
+        for tenant, pool in tenant_mix.items():
+            if not 0 <= tenant < n_tenants:
+                raise ValueError(
+                    f"tenant_mix key {tenant} outside range({n_tenants}) — "
+                    f"the pinning would silently never apply"
+                )
+            if not pool or not all(0 <= i < n_templates for i in pool):
+                raise ValueError(
+                    f"tenant_mix[{tenant}] must be non-empty template "
+                    f"indices < n_templates, got {pool!r}"
+                )
+            arr = np.asarray(pool, dtype=np.int64)
+            sub = probs[arr]
+            mix_probs[tenant] = (arr, sub / sub.sum())
     templates = workload(dataset, tables, kind=kind,
                          n_queries=n_templates, seed=seed)
-    rng = np.random.default_rng(seed + 7)
-    ranks = np.arange(1, n_templates + 1, dtype=np.float64)
-    probs = ranks ** -float(skew)
-    probs /= probs.sum()
-    for _ in range(n_queries):
-        t_idx = int(rng.choice(n_templates, p=probs))
-        tenant = int(rng.integers(0, n_tenants))
-        yield tenant, templates[t_idx]
+
+    def _gen():
+        rng = np.random.default_rng(seed + 7)
+        if tenant_skew is None and tenant_mix is None:
+            # legacy draw order — keep existing fixed-seed streams unchanged
+            for _ in range(n_queries):
+                t_idx = int(rng.choice(n_templates, p=probs))
+                tenant = int(rng.integers(0, n_tenants))
+                yield tenant, templates[t_idx]
+            return
+        tenant_probs = (
+            _zipf_probs(n_tenants, tenant_skew)
+            if tenant_skew is not None
+            else np.full(n_tenants, 1.0 / n_tenants)
+        )
+        for _ in range(n_queries):
+            tenant = int(rng.choice(n_tenants, p=tenant_probs))
+            if tenant in mix_probs:
+                arr, sub = mix_probs[tenant]
+                t_idx = int(arr[int(rng.choice(len(arr), p=sub))])
+            else:
+                t_idx = int(rng.choice(n_templates, p=probs))
+            yield tenant, templates[t_idx]
+
+    return _gen()
 
 
 # --------------------------------------------------------------------------- #
@@ -188,6 +248,8 @@ def mutating_workload(
     skew: float = 1.1,
     kind: str = "random",
     seed: int = 0,
+    tenant_skew: Optional[float] = None,
+    tenant_mix: Optional[Dict[int, Tuple[int, ...]]] = None,
 ) -> Iterator[Tuple]:
     """The serving stream with registry mutations interleaved.
 
@@ -204,7 +266,8 @@ def mutating_workload(
     """
     stream = serving_workload(dataset, tables, n_queries=n_queries,
                               n_templates=n_templates, n_tenants=n_tenants,
-                              skew=skew, kind=kind, seed=seed)
+                              skew=skew, kind=kind, seed=seed,
+                              tenant_skew=tenant_skew, tenant_mix=tenant_mix)
     rng = np.random.default_rng(seed + 13)
     mut_tables = sorted({t for j in JOIN_GRAPHS[dataset] for a in j
                          for t in (a.split(".")[0],)})

@@ -4,7 +4,7 @@ Layers (see docs/serving.md):
 
 * :mod:`repro.service.server`       — submit/poll/result API + admission
 * :mod:`repro.service.registry`     — epoch-versioned mutable table registry
-* :mod:`repro.service.scheduler`    — round-robin morsel interleaver
+* :mod:`repro.service.scheduler`    — QoS morsel scheduler (rr/wfq/deadline)
 * :mod:`repro.service.session`      — per-query state machine
 * :mod:`repro.service.plan_cache`   — LRU plan cache (canonical signatures)
 * :mod:`repro.service.result_cache` — answer cache keyed on table epochs
@@ -15,7 +15,7 @@ from repro.service.impute_store import SharedImputeStore, resolve_shared_impute
 from repro.service.plan_cache import PlanCache, query_signature
 from repro.service.registry import TableRegistry
 from repro.service.result_cache import ResultCache
-from repro.service.scheduler import MorselScheduler
+from repro.service.scheduler import COST_MODELS, POLICIES, MorselScheduler
 from repro.service.server import QuipService
 from repro.service.session import QuerySession
 
@@ -23,6 +23,8 @@ __all__ = [
     "QuipService",
     "QuerySession",
     "MorselScheduler",
+    "POLICIES",
+    "COST_MODELS",
     "PlanCache",
     "query_signature",
     "ResultCache",

@@ -1,57 +1,290 @@
-"""Round-robin morsel-interleaving scheduler.
+"""Per-tenant QoS morsel scheduling (round-robin / weighted-fair / deadline).
 
 Runs many QuipExecutor pipelines as coroutines on one thread: each
 scheduler step advances exactly one session by one top-level morsel
-(``QuipExecutor.steps()``), then rotates.  A query stuck in a long
-ρ-fixpoint only occupies its own step — queued neighbors keep streaming
-between its morsels, so one slow query cannot head-of-line-block the
-admission queue.  Generator stepping also serializes every
-enqueue→flush→lookup sequence, which is what makes the shared ImputeStore
-safe without locks (see service/impute_store.py).
+(``QuipExecutor.steps()``), then picks the next session by policy.  A
+query stuck in a long ρ-fixpoint only occupies its own step — queued
+neighbors keep streaming between its morsels, so one slow query cannot
+head-of-line-block the admission queue.  Generator stepping also
+serializes every enqueue→flush→lookup sequence, which is what makes the
+shared ImputeStore safe without locks (see service/impute_store.py) —
+and, crucially, what makes **answers policy-independent**: any policy
+produces the same per-query answers as serial replay, it only changes
+*who waits* (see docs/serving.md "Scheduling & QoS").
+
+Policies
+--------
+``rr``
+    The original FIFO ring: one step per session per rotation, tenants
+    ignored.  A tenant flooding expensive sessions gets one ring slot per
+    session, so its share grows linearly with its flood.
+``wfq``
+    Weighted fair queueing over *tenants* (stride/virtual-time): every
+    step charges the session's tenant ``cost / weight`` of virtual time
+    and the tenant with the least virtual time runs next (sessions of one
+    tenant round-robin among themselves).  A tenant's morsel-time share
+    converges to its weight share regardless of how many sessions it
+    floods.  Tenants joining after idling are clamped to the current
+    virtual-time floor, so sleeping never banks credit.
+``deadline``
+    Earliest-deadline-first over sessions.  A tenant's deadline *class*
+    (relative, in cost units) is added to the scheduler clock at
+    admission; sessions without a class sort last (FIFO among
+    themselves).  Deadline classes are assigned under every policy — so
+    ``deadline_met`` telemetry is comparable across policies — but only
+    this policy orders by them.
+
+Charging (``cost_model``)
+-------------------------
+``active`` (default)
+    Per-step **active time**: the wall seconds the morsel actually
+    consumed inside ``session.step()`` plus the step's *simulated*
+    imputation seconds (``ImputationService.simulated_seconds`` delta —
+    expensive imputers modeled without sleeps).  A 50 ms ρ-fixpoint
+    morsel costs 50× a 1 ms scan morsel, not one ticket.
+``simulated``
+    Only the simulated-seconds delta (plus an epsilon floor so virtual
+    time always advances) — deterministic across runs.
+``unit``
+    One ticket per step — deterministic step-share accounting, what the
+    fairness tests and ``benchmarks/exp10_qos.py`` assert on (no wall
+    clock anywhere).
+
+The scheduler ``clock`` advances by the charged cost of every step, so
+deadlines and per-session turnaround (``admit_clock``/``finish_clock``)
+live on one policy-comparable, optionally wall-clock-free axis.
 """
 
 from __future__ import annotations
 
-from collections import deque
-from typing import Deque, List, Optional
+import heapq
+import itertools
+import math
+from collections import Counter, deque
+from typing import Deque, Dict, List, Optional
 
 from repro.service.session import RUNNING, QuerySession
 
-__all__ = ["MorselScheduler"]
+__all__ = ["MorselScheduler", "POLICIES", "COST_MODELS"]
+
+POLICIES = ("rr", "wfq", "deadline")
+COST_MODELS = ("active", "simulated", "unit")
+
+# floor so zero-measured-cost steps still advance virtual time / the clock
+_EPS = 1e-9
+
+
+class _TenantState:
+    """Per-tenant WFQ bookkeeping: weight, virtual time, session ring."""
+
+    __slots__ = ("key", "seq", "weight", "vtime", "queue")
+
+    def __init__(self, key, seq: int, weight: float):
+        self.key = key
+        self.seq = seq  # first-activation order: deterministic tie-break
+        self.weight = weight
+        self.vtime = 0.0
+        self.queue: Deque[QuerySession] = deque()
 
 
 class MorselScheduler:
-    def __init__(self):
-        self._ring: Deque[QuerySession] = deque()
+    def __init__(
+        self,
+        policy: str = "rr",
+        *,
+        weights: Optional[Dict] = None,
+        default_weight: float = 1.0,
+        deadlines: Optional[Dict] = None,
+        default_deadline: Optional[float] = None,
+        cost_model: str = "active",
+    ):
+        if policy not in POLICIES:
+            raise ValueError(f"unknown scheduler policy {policy!r}; "
+                             f"expected one of {POLICIES}")
+        if cost_model not in COST_MODELS:
+            raise ValueError(f"unknown cost model {cost_model!r}; "
+                             f"expected one of {COST_MODELS}")
+        if default_weight <= 0:
+            raise ValueError("default_weight must be > 0")
+        for t, w in (weights or {}).items():
+            if w <= 0:
+                raise ValueError(f"tenant {t!r} weight must be > 0, got {w}")
+        self.policy = policy
+        self.cost_model = cost_model
+        self._weights = dict(weights or {})
+        self._default_weight = float(default_weight)
+        self._deadlines = dict(deadlines or {})
+        self._default_deadline = default_deadline
 
+        #: total charged cost so far — seconds under ``active``/``simulated``,
+        #: steps under ``unit``; deadlines and turnaround live on this axis
+        self.clock = 0.0
+
+        self._ring: Deque[QuerySession] = deque()  # rr
+        self._tenants: Dict[object, _TenantState] = {}  # wfq
+        self._active: set = set()  # wfq: tenants with queued sessions
+        self._vfloor = 0.0  # wfq: max vtime any tenant retired at
+        self._heap: List[tuple] = []  # deadline: (deadline, seq, session)
+        self._seq = itertools.count()
+        self._nrun = 0
+        self._run_by_tenant: Counter = Counter()
+        self._tenant_steps: Counter = Counter()
+        self._tenant_cost: Counter = Counter()
+
+    # ------------------------------------------------------------------ #
+    # introspection
+    # ------------------------------------------------------------------ #
     @property
     def running(self) -> int:
-        return len(self._ring)
+        return self._nrun
 
     def sessions(self) -> List[QuerySession]:
-        return list(self._ring)
+        if self.policy == "rr":
+            return list(self._ring)
+        if self.policy == "wfq":
+            return [s for t in self._tenants.values() for s in t.queue]
+        return [s for _d, _i, s in sorted(self._heap, key=lambda e: e[:2])]
 
+    def tenant_running(self, tenant) -> int:
+        """Currently admitted (RUNNING) sessions of ``tenant`` — what the
+        per-tenant admission quota in QuipService gates on."""
+        return self._run_by_tenant[tenant]
+
+    def weight(self, tenant) -> float:
+        return self._weights.get(tenant, self._default_weight)
+
+    def tenant_accounting(self) -> Dict[object, Dict[str, float]]:
+        """Live per-tenant share accounting: morsel steps taken, charged
+        cost, and configured weight (records-based shares live on
+        ``ServingStats.tenant_summary``)."""
+        tenants = set(self._tenant_steps) | set(self._weights)
+        return {
+            t: {
+                "steps": int(self._tenant_steps[t]),
+                "cost": self._tenant_cost[t],
+                "weight": self.weight(t),
+            }
+            for t in tenants
+        }
+
+    # ------------------------------------------------------------------ #
+    # admission
+    # ------------------------------------------------------------------ #
     def add(self, session: QuerySession) -> None:
         session.start()
-        if session.state == RUNNING:
+        if session.state != RUNNING:
+            return
+        session.admit_clock = self.clock
+        rel = self._deadlines.get(session.tenant, self._default_deadline)
+        if rel is not None:
+            session.deadline = self.clock + float(rel)
+        self._nrun += 1
+        self._run_by_tenant[session.tenant] += 1
+        if self.policy == "rr":
             self._ring.append(session)
+        elif self.policy == "wfq":
+            ts = self._tenants.get(session.tenant)
+            if ts is None:
+                ts = _TenantState(session.tenant, next(self._seq),
+                                  self.weight(session.tenant))
+                self._tenants[session.tenant] = ts
+            if not ts.queue:
+                # (re)activation: clamp to the floor so idling banks no
+                # credit — a returning tenant competes from "now", it does
+                # not get a monopolizing backlog of virtual time
+                floor = min(
+                    (self._tenants[k].vtime for k in self._active),
+                    default=self._vfloor,
+                )
+                ts.vtime = max(ts.vtime, floor)
+                self._active.add(session.tenant)
+            ts.queue.append(session)
+        else:  # deadline: EDF; no class sorts last, FIFO among peers
+            key = session.deadline if session.deadline is not None else math.inf
+            heapq.heappush(self._heap, (key, next(self._seq), session))
 
+    # ------------------------------------------------------------------ #
+    # one scheduling decision
+    # ------------------------------------------------------------------ #
     def step(self) -> Optional[QuerySession]:
-        """Advance the head session one morsel.  Returns the session if it
-        finished (done or failed) on this step, else None."""
+        """Advance the policy-chosen session one morsel and charge its
+        tenant.  Returns the session if it finished (done or failed) on
+        this step, else None."""
+        if self.policy == "rr":
+            return self._step_rr()
+        if self.policy == "wfq":
+            return self._step_wfq()
+        return self._step_deadline()
+
+    def _step_rr(self) -> Optional[QuerySession]:
         if not self._ring:
             return None
         session = self._ring.popleft()
-        if session.step():
+        finished = session.step()
+        self._charge(session, finished)
+        if finished:
             return session
         self._ring.append(session)
         return None
 
+    def _step_wfq(self) -> Optional[QuerySession]:
+        if not self._active:
+            return None
+        ts = min((self._tenants[k] for k in self._active),
+                 key=lambda t: (t.vtime, t.seq))
+        session = ts.queue.popleft()
+        finished = session.step()
+        cost = self._charge(session, finished)
+        ts.vtime += cost / ts.weight
+        if finished:
+            if not ts.queue:
+                self._active.discard(ts.key)
+                self._vfloor = max(self._vfloor, ts.vtime)
+            return session
+        ts.queue.append(session)
+        return None
+
+    def _step_deadline(self) -> Optional[QuerySession]:
+        if not self._heap:
+            return None
+        key, seq, session = heapq.heappop(self._heap)
+        finished = session.step()
+        self._charge(session, finished)
+        if finished:
+            return session
+        # original (deadline, seq): FIFO among equal deadlines is stable
+        heapq.heappush(self._heap, (key, seq, session))
+        return None
+
+    def _charge(self, session: QuerySession, finished: bool) -> float:
+        if self.cost_model == "unit":
+            cost = 1.0
+        elif self.cost_model == "simulated":
+            cost = session.last_step_sim_s + _EPS
+        else:  # active: wall + simulated, floored so the clock advances
+            cost = max(session.last_step_wall_s + session.last_step_sim_s,
+                       _EPS)
+        self.clock += cost
+        session.sched_cost += cost
+        tenant = session.tenant
+        self._tenant_steps[tenant] += 1
+        self._tenant_cost[tenant] += cost
+        if finished:
+            self._nrun -= 1
+            self._run_by_tenant[tenant] -= 1
+            session.finish_clock = self.clock
+            if session.deadline is not None:
+                session.deadline_met = self.clock <= session.deadline
+        return cost
+
     def drain(self) -> List[QuerySession]:
         """Step until every running session finishes; returns them in
-        completion order."""
+        completion order (under ``deadline`` that order respects deadline
+        classes).  Only *admitted* sessions drain — QuipService cancels
+        its never-admitted waiting queue on ``close()`` so queued work
+        lands a failed QueryRecord instead of vanishing."""
         finished: List[QuerySession] = []
-        while self._ring:
+        while self._nrun:
             done = self.step()
             if done is not None:
                 finished.append(done)

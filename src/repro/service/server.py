@@ -3,10 +3,11 @@
 The serving layer the ROADMAP's "heavy traffic" north star needs on top of
 the single-query engine: a submit/poll/result API over an epoch-versioned
 :class:`TableRegistry`, admission control with a configurable in-flight
-limit, a round-robin morsel-interleaving scheduler, an LRU plan cache, an
-answer-level result cache keyed on table epochs, and (gated) cross-query
-imputation sharing.  Registry mutations invalidate every dependent cache
-(see docs/serving.md "Invalidation & result cache").
+limit plus per-tenant quotas, a QoS morsel scheduler (round-robin,
+weighted-fair, or deadline — see service/scheduler.py), an LRU plan cache,
+an answer-level result cache keyed on table epochs, and (gated)
+cross-query imputation sharing.  Registry mutations invalidate every
+dependent cache (see docs/serving.md "Invalidation & result cache").
 
 ::
 
@@ -106,6 +107,14 @@ class QuipService:
         join_impl: Optional[str] = None,
         minmax_opt: bool = True,
         use_vf: bool = True,
+        scheduler_policy: str = "rr",
+        cost_model: str = "active",
+        tenant_weights: Optional[Dict] = None,
+        default_weight: float = 1.0,
+        tenant_deadlines: Optional[Dict] = None,
+        default_deadline: Optional[float] = None,
+        tenant_quotas: Optional[Dict] = None,
+        default_tenant_quota: Optional[int] = None,
     ):
         assert max_inflight >= 1
         self.registry: TableRegistry = (
@@ -126,7 +135,31 @@ class QuipService:
         self.result_cache: Optional[ResultCache] = (
             ResultCache(result_cache_size) if result_cache_size else None
         )
-        self.scheduler = MorselScheduler()
+        self.scheduler = MorselScheduler(
+            scheduler_policy,
+            weights=tenant_weights,
+            default_weight=default_weight,
+            deadlines=tenant_deadlines,
+            default_deadline=default_deadline,
+            cost_model=cost_model,
+        )
+        # per-tenant admission quota: at most N concurrently *admitted*
+        # sessions per tenant (None = unlimited); the global max_inflight
+        # still caps the total.  Quota-blocked sessions are skipped, not
+        # head-of-line blockers — later tenants admit past them.  A quota
+        # below 1 could never admit — run_until_idle would spin forever.
+        for t, q in (tenant_quotas or {}).items():
+            if q < 1:
+                raise ValueError(
+                    f"tenant {t!r} quota must be >= 1, got {q}"
+                )
+        if default_tenant_quota is not None and default_tenant_quota < 1:
+            raise ValueError(
+                f"default_tenant_quota must be >= 1, got "
+                f"{default_tenant_quota}"
+            )
+        self._tenant_quotas = dict(tenant_quotas or {})
+        self._default_tenant_quota = default_tenant_quota
         self.serving = ServingStats()
         self._exec_kwargs = {
             "morsel_rows": morsel_rows,
@@ -171,6 +204,10 @@ class QuipService:
             epochs = self.registry.epochs(query.tables)
         except KeyError:
             return None
+        # scheduling knobs (policy, weights, deadlines, quotas, cost
+        # model) are deliberately NOT part of the key: answers are
+        # policy-independent (see docs/serving.md "Scheduling & QoS"),
+        # so an answer computed under one policy is valid under any other
         exec_sig = (strategy, self.shared_impute) + tuple(
             sorted(self._exec_kwargs.items())
         )
@@ -200,7 +237,8 @@ class QuipService:
         consulted first: a signature already answered at the current table
         epochs completes immediately without planning or execution.
         Otherwise admission is immediate when fewer than ``max_inflight``
-        sessions are running, else the session waits in FIFO order."""
+        sessions are running and the tenant is under its quota, else the
+        session waits (FIFO, quota-blocked sessions skipped in place)."""
         strategy = strategy or self.default_strategy
         if self.result_cache is not None:
             key = self._result_key(query, strategy)
@@ -221,10 +259,10 @@ class QuipService:
             exec_kwargs=self._exec_kwargs,
         )
         self._sessions[session.ticket] = session
-        if self.scheduler.running >= self.max_inflight:
-            self.serving.admission_queued += 1
         self._waiting.append(session)
         self._admit()
+        if session.state == QUEUED:  # ring full or tenant quota exhausted
+            self.serving.admission_queued += 1
         return session.ticket
 
     def poll(self, ticket: int) -> str:
@@ -281,15 +319,30 @@ class QuipService:
         return self.result(ticket).answer_tuples()
 
     def close(self) -> None:
-        """Detach this service from its registry's subscriber hooks.
+        """Detach from the registry's subscriber hooks and cancel the
+        admission queue.
 
-        Required when the registry outlives the service (several services
-        over one shared registry): an attached-but-discarded service would
-        be kept alive by the subscription, its plan/result caches never
-        freed, and every future mutation would still pay its invalidation
-        scan.  The service remains usable afterwards, just un-notified —
-        don't submit to it across later mutations."""
+        Detaching is required when the registry outlives the service
+        (several services over one shared registry): an
+        attached-but-discarded service would be kept alive by the
+        subscription, its plan/result caches never freed, and every future
+        mutation would still pay its invalidation scan.
+
+        Queued-but-never-admitted sessions are **cancelled, not dropped**:
+        each lands a ``failed=True`` QueryRecord (extending the PR 4
+        "failures are telemetry" fix to shutdown), ``poll`` reports
+        ``failed``, and ``result`` raises the cancellation.  Already
+        admitted sessions are untouched — drain them first
+        (``run_until_idle``) for a clean shutdown, or after close() via
+        ``step``/``result``, which no longer admits anything new."""
         self.registry.unsubscribe(self._on_mutation)
+        while self._waiting:
+            session = self._waiting.popleft()
+            session.cancel(RuntimeError(
+                f"service closed before ticket {session.ticket} was "
+                f"admitted"
+            ))
+            self._finalize(session)
 
     def release(self, ticket: int) -> None:
         """Drop a finished ticket's retained result.
@@ -415,12 +468,27 @@ class QuipService:
     # ------------------------------------------------------------------ #
     # admission + finalization
     # ------------------------------------------------------------------ #
+    def _tenant_quota(self, tenant) -> Optional[int]:
+        return self._tenant_quotas.get(tenant, self._default_tenant_quota)
+
     def _admit(self) -> None:
+        # FIFO except for per-tenant quotas: a session whose tenant is at
+        # its quota is skipped (put back at the front, order preserved) so
+        # one tenant's flood cannot head-of-line-block everyone else's
+        # admissions; it is reconsidered as soon as a slot frees up.
+        quota_blocked: Deque[QuerySession] = deque()
         while self._waiting and self.scheduler.running < self.max_inflight:
             session = self._waiting.popleft()
+            quota = self._tenant_quota(session.tenant)
+            if (quota is not None
+                    and self.scheduler.tenant_running(session.tenant)
+                    >= quota):
+                quota_blocked.append(session)
+                continue
             self.scheduler.add(session)
             if session.state == FAILED:
                 self._finalize(session)
+        self._waiting.extendleft(reversed(quota_blocked))
         self.serving.observe_concurrency(self.scheduler.running)
 
     def _finalize(self, session: QuerySession) -> None:
@@ -451,6 +519,11 @@ class QuipService:
             counters=counters,
             result_cache_hit=session.result_cache_hit,
             failed=session.state == FAILED,
+            steps=session.steps_taken,
+            sched_cost=session.sched_cost,
+            admit_clock=session.admit_clock or 0.0,
+            finish_clock=session.finish_clock or 0.0,
+            deadline_met=session.deadline_met,
         ))
         # only the result (and its counters) outlives completion — the
         # table copies / engine / coroutine are the session's bulk
@@ -515,6 +588,15 @@ class QuipService:
             })
         out["registry_epoch"] = self.registry.global_epoch
         out["shared_impute"] = int(self.shared_impute)
+        out["scheduler_policy"] = self.scheduler.policy
+        out["sched_clock"] = round(self.scheduler.clock, 6)
         if self.store is not None:
             out["store_filled_cells"] = self.store.filled_cells()
         return out
+
+    def tenant_summary(self) -> Dict:
+        """Per-tenant QoS telemetry over finished queries: p50/p95
+        latency, queue wait, morsel steps, charged cost + cost share,
+        p95 turnaround on the scheduler clock, deadline hit-rate
+        (see :meth:`ServingStats.tenant_summary`)."""
+        return self.serving.tenant_summary()

@@ -67,6 +67,17 @@ class QuerySession:
         # ResultCache (captures the table epochs the execution observed)
         self.result_key: Optional[Tuple] = None
 
+        # -- per-step QoS accounting (read/written by MorselScheduler) -- #
+        self.last_step_wall_s = 0.0  # wall seconds of the latest morsel
+        self.last_step_sim_s = 0.0  # simulated imputation seconds, ditto
+        self.steps_taken = 0  # morsel steps (== scheduler steps charged)
+        self.active_s = 0.0  # total wall+simulated across all steps
+        self.sched_cost = 0.0  # cost charged under the scheduler's model
+        self.admit_clock: Optional[float] = None  # scheduler clock at add
+        self.finish_clock: Optional[float] = None  # ... at completion
+        self.deadline: Optional[float] = None  # absolute, on the clock axis
+        self.deadline_met: Optional[bool] = None
+
         self.state = QUEUED
         self.submitted_at = time.perf_counter()
         self.started_at: Optional[float] = None
@@ -136,21 +147,45 @@ class QuerySession:
         yield  # pragma: no cover - makes this a generator
 
     def step(self) -> bool:
-        """Advance one morsel; True when the session left RUNNING."""
+        """Advance one morsel; True when the session left RUNNING.
+
+        Each step records its own **active time** — the wall seconds the
+        morsel consumed plus the delta of the engine's simulated
+        imputation seconds — so the QoS scheduler can charge a 50 ms
+        ρ-fixpoint morsel 50× a 1 ms scan morsel instead of one ticket."""
         if self.state != RUNNING:
             return True
+        sim0 = self.engine.simulated_seconds if self.engine is not None else 0.0
+        t0 = time.perf_counter()
         try:
             next(self._gen)
-            return False
+            finished = False
         except StopIteration:
             if self.result is None:
                 self.result = self._executor.result
             self.state = DONE
             self.finished_at = time.perf_counter()
-            return True
+            finished = True
         except Exception as e:  # query errors surface via result();
             self._fail(e)       # KeyboardInterrupt/SystemExit propagate
-            return True
+            finished = True
+        wall = time.perf_counter() - t0
+        sim = (self.engine.simulated_seconds
+               if self.engine is not None else 0.0) - sim0
+        self.last_step_wall_s = wall
+        self.last_step_sim_s = sim
+        self.steps_taken += 1
+        self.active_s += wall + sim
+        return finished
+
+    def cancel(self, error: BaseException) -> None:
+        """Fail a never-admitted (QUEUED) session — e.g. the admission
+        queue being cancelled at ``QuipService.close()``.  The session
+        lands a ``failed=True`` QueryRecord instead of vanishing; its
+        queue-wait covers submit → cancellation."""
+        assert self.state == QUEUED, self.state
+        self.started_at = time.perf_counter()
+        self._fail(error)
 
     def _fail(self, error: BaseException) -> None:
         self.state = FAILED

@@ -1,0 +1,246 @@
+"""MorselScheduler QoS properties, on synthetic sessions with scripted
+per-step costs: round-robin regression, bounded starvation gap under equal
+weights, weighted-share convergence under uneven morsel costs, EDF drain
+order, and the no-banked-credit rule for late joiners.
+
+The fake sessions implement exactly the slice of the QuerySession protocol
+the scheduler reads (start/state/step + the per-step cost slots), so every
+assertion here is deterministic — no executors, no wall clock beyond the
+scripted costs."""
+
+from __future__ import annotations
+
+import math
+
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.service import MorselScheduler
+from repro.service.session import DONE, QUEUED, RUNNING
+
+
+class FakeSession:
+    """Scheduler-protocol stand-in: one scripted cost per remaining step."""
+
+    def __init__(self, ticket, tenant, costs):
+        self.ticket = ticket
+        self.tenant = tenant
+        self._costs = list(costs)
+        assert self._costs
+        self.state = QUEUED
+        self.last_step_wall_s = 0.0
+        self.last_step_sim_s = 0.0
+        self.steps_taken = 0
+        self.active_s = 0.0
+        self.sched_cost = 0.0
+        self.admit_clock = None
+        self.finish_clock = None
+        self.deadline = None
+        self.deadline_met = None
+
+    def start(self):
+        self.state = RUNNING
+
+    def step(self):
+        cost = self._costs.pop(0)
+        self.last_step_wall_s = cost
+        self.last_step_sim_s = 0.0
+        self.steps_taken += 1
+        self.active_s += cost
+        if not self._costs:
+            self.state = DONE
+            return True
+        return False
+
+
+def test_rr_matches_legacy_ring_order():
+    """policy="rr" preserves the original FIFO-ring rotation exactly."""
+    sched = MorselScheduler("rr", cost_model="unit")
+    sessions = [FakeSession(i, tenant=i, costs=[1.0] * 3) for i in range(3)]
+    for s in sessions:
+        sched.add(s)
+    trace = []
+    while sched.running:
+        head = sched._ring[0]
+        sched.step()
+        trace.append(head.ticket)
+    assert trace == [0, 1, 2] * 3
+
+
+@settings(max_examples=8, deadline=None)
+@given(n_tenants=st.integers(2, 5), n_steps=st.integers(3, 12))
+def test_equal_weights_bounded_starvation_gap(n_tenants, n_steps):
+    """Equal weights, unit costs, one session per tenant: no session
+    waits more than ``n_tenants`` scheduler steps between its consecutive
+    morsels (perfect rotation) — nobody starves."""
+    sched = MorselScheduler("wfq", cost_model="unit")
+    sessions = [FakeSession(i, tenant=i, costs=[1.0] * n_steps)
+                for i in range(n_tenants)]
+    for s in sessions:
+        sched.add(s)
+    step_of = {s.ticket: [] for s in sessions}
+    i = 0
+    while sched.running:
+        counts = {s.ticket: s.steps_taken for s in sessions}
+        sched.step()
+        for s in sessions:
+            if s.steps_taken != counts[s.ticket]:
+                step_of[s.ticket].append(i)
+        i += 1
+    for ticket, steps in step_of.items():
+        assert len(steps) == n_steps
+        gaps = [b - a for a, b in zip(steps, steps[1:])]
+        assert max(gaps, default=0) <= n_tenants, (
+            f"session {ticket} starved: gaps {gaps}"
+        )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    w_a=st.sampled_from([1, 2, 3, 4]),
+    w_b=st.sampled_from([1, 2, 3, 4]),
+    cost_a=st.floats(0.5, 8.0),
+    cost_b=st.floats(0.5, 8.0),
+)
+def test_weighted_shares_converge_to_weight_ratio(w_a, w_b, cost_a, cost_b):
+    """Under active-time charging with uneven per-step morsel costs, each
+    tenant's charged-cost share converges to its weight share: tenant A
+    burning ``cost_a`` seconds per morsel gets proportionally *fewer*
+    morsels, not a free ride."""
+    n = 4000
+    sched = MorselScheduler(
+        "wfq", weights={"A": float(w_a), "B": float(w_b)},
+        cost_model="active",
+    )
+    a = FakeSession(0, "A", costs=[cost_a] * n)
+    b = FakeSession(1, "B", costs=[cost_b] * n)
+    sched.add(a)
+    sched.add(b)
+    for _ in range(600):  # neither session finishes: steady state
+        sched.step()
+    acct = sched.tenant_accounting()
+    total = acct["A"]["cost"] + acct["B"]["cost"]
+    want_a = w_a / (w_a + w_b)
+    got_a = acct["A"]["cost"] / total
+    # discretization: one morsel granularity around the ideal share
+    tol = max(cost_a, cost_b) / total + 0.02
+    assert abs(got_a - want_a) <= tol, (
+        f"share {got_a:.3f} vs weight share {want_a:.3f} (tol {tol:.3f})"
+    )
+
+
+def test_deadline_drain_completion_order():
+    """EDF: drain() completes sessions in deadline order; sessions with no
+    deadline class run last (FIFO among themselves), and deadline_met is
+    evaluated against the cost clock."""
+    sched = MorselScheduler(
+        "deadline",
+        deadlines={"tight": 6.0, "loose": 40.0},
+        cost_model="unit",
+    )
+    no_class = [FakeSession(10 + i, f"bg{i}", costs=[1.0] * 4)
+                for i in range(2)]
+    loose = FakeSession(2, "loose", costs=[1.0] * 4)
+    tight = FakeSession(1, "tight", costs=[1.0] * 4)
+    # admission order deliberately worst-case: background first
+    for s in no_class + [loose, tight]:
+        sched.add(s)
+    finished = sched.drain()
+    assert [s.ticket for s in finished] == [1, 2, 10, 11]
+    assert tight.deadline_met is True  # finished at clock 4 <= 6
+    assert loose.deadline_met is True
+    assert no_class[0].deadline_met is None  # no class, no verdict
+    assert sched.running == 0
+
+
+def test_deadline_miss_is_recorded():
+    sched = MorselScheduler("deadline", deadlines={"t": 2.0},
+                            cost_model="unit")
+    slow = FakeSession(1, "t", costs=[1.0] * 5)
+    sched.add(slow)
+    sched.drain()
+    assert slow.deadline_met is False  # finished at clock 5 > 2
+
+
+def test_wfq_late_joiner_gets_no_banked_credit():
+    """A tenant that idles while another runs joins at the current
+    virtual-time floor: it immediately shares ~50/50 but never gets a
+    monopolizing catch-up burst."""
+    sched = MorselScheduler("wfq", cost_model="unit")
+    a = FakeSession(0, "A", costs=[1.0] * 200)
+    sched.add(a)
+    for _ in range(50):
+        sched.step()
+    b = FakeSession(1, "B", costs=[1.0] * 200)
+    sched.add(b)
+    a_before, b_before = a.steps_taken, b.steps_taken
+    for _ in range(20):
+        sched.step()
+    a_gain = a.steps_taken - a_before
+    b_gain = b.steps_taken - b_before
+    assert abs(a_gain - b_gain) <= 1, (a_gain, b_gain)
+
+
+def test_wfq_share_independent_of_session_flood():
+    """The aggressor scenario in miniature: tenant A floods 6 sessions,
+    tenant B has 1.  Round-robin gives A 6/7 of the steps; WFQ pins the
+    per-tenant split at the weight ratio (1:1) while both are active."""
+    def mk(policy):
+        sched = MorselScheduler(policy, cost_model="unit")
+        for i in range(6):
+            sched.add(FakeSession(i, "A", costs=[1.0] * 50))
+        sched.add(FakeSession(99, "B", costs=[1.0] * 50))
+        for _ in range(70):  # B still running in both policies
+            sched.step()
+        acct = sched.tenant_accounting()
+        return acct["B"]["steps"] / (acct["A"]["steps"]
+                                     + acct["B"]["steps"])
+    rr_share = mk("rr")
+    wfq_share = mk("wfq")
+    assert rr_share == pytest.approx(1 / 7, abs=0.03)
+    assert wfq_share == pytest.approx(0.5, abs=0.03)
+    assert wfq_share > rr_share
+
+
+def test_scheduler_validates_knobs():
+    with pytest.raises(ValueError, match="policy"):
+        MorselScheduler("fifo")
+    with pytest.raises(ValueError, match="cost model"):
+        MorselScheduler("rr", cost_model="wall")
+    with pytest.raises(ValueError, match="weight"):
+        MorselScheduler("wfq", weights={"A": 0.0})
+    with pytest.raises(ValueError, match="default_weight"):
+        MorselScheduler("wfq", default_weight=-1.0)
+
+
+def test_drain_empty_all_policies():
+    for policy in ("rr", "wfq", "deadline"):
+        sched = MorselScheduler(policy)
+        assert sched.drain() == [] and sched.running == 0
+        assert sched.sessions() == []
+
+
+def test_sessions_listing_all_policies():
+    for policy in ("rr", "wfq", "deadline"):
+        sched = MorselScheduler(policy, cost_model="unit")
+        s1 = FakeSession(1, "A", costs=[1.0] * 2)
+        s2 = FakeSession(2, "B", costs=[1.0] * 2)
+        sched.add(s1)
+        sched.add(s2)
+        assert {s.ticket for s in sched.sessions()} == {1, 2}
+        assert sched.running == 2
+        assert sched.tenant_running("A") == 1
+        sched.drain()
+        assert sched.tenant_running("A") == 0
+
+
+def test_clock_advances_by_charged_cost():
+    sched = MorselScheduler("rr", cost_model="active")
+    s = FakeSession(1, None, costs=[2.0, 3.0, 5.0])
+    sched.add(s)
+    sched.drain()
+    assert sched.clock == pytest.approx(10.0)
+    assert s.sched_cost == pytest.approx(10.0)
+    assert s.finish_clock == pytest.approx(10.0)
+    assert s.admit_clock == 0.0
+    assert math.isclose(s.active_s, 10.0)

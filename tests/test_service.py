@@ -632,6 +632,214 @@ def test_failed_admission_immediate_when_slot_free():
 
 
 # --------------------------------------------------------------------------- #
+# QoS: per-tenant scheduling, quotas, deadlines, shutdown with a queue
+# --------------------------------------------------------------------------- #
+def test_close_cancels_admission_queue():
+    """Queued-but-never-admitted sessions must land a failed QueryRecord on
+    close(), not vanish — the PR 4 "failures are telemetry" rule extended
+    to shutdown.  The running session is untouched and still drains."""
+    tables, _clean, truth = _instance()
+    svc = _service(tables, truth, inflight=1, result_cache_size=0)
+    t1 = svc.submit(_query(4))
+    t2 = svc.submit(_query(3))
+    t3 = svc.submit(_query(2))
+    assert svc.poll(t2) == "queued" and svc.poll(t3) == "queued"
+    svc.close()
+    assert svc.poll(t2) == "failed" and svc.poll(t3) == "failed"
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.result(t2)
+    svc.run_until_idle()  # the admitted head still completes
+    assert svc.poll(t1) == "done"
+    records = {r.ticket: r for r in svc.serving.records}
+    assert set(records) == {t1, t2, t3}
+    assert records[t2].failed and records[t3].failed
+    assert not records[t1].failed
+    assert records[t2].queue_wait_s >= 0
+    summary = svc.summary()
+    assert summary["queries"] == 3 and summary["failed"] == 2
+
+
+def test_scheduler_drain_ignores_admission_queue():
+    """MorselScheduler.drain() only completes *admitted* sessions; the
+    service-level waiting queue is the server's to cancel (close()) or
+    admit (step/run_until_idle) — no session is silently lost either way."""
+    tables, _clean, truth = _instance()
+    svc = _service(tables, truth, inflight=1, result_cache_size=0)
+    t1 = svc.submit(_query(4))
+    t2 = svc.submit(_query(3))
+    finished = svc.scheduler.drain()
+    assert [s.ticket for s in finished] == [t1]
+    assert svc.poll(t2) == "queued"  # still waiting, not dropped
+    svc._finalize(finished[0])  # drain() bypasses the server's finalize
+    svc.run_until_idle()  # admission resumes; t2 runs to completion
+    assert svc.poll(t2) == "done"
+    assert {r.ticket for r in svc.serving.records} == {t1, t2}
+
+
+def test_tenant_quota_limits_concurrent_admissions():
+    """A tenant at its quota waits even with free global slots, and does
+    not head-of-line-block other tenants queued behind it."""
+    tables, _clean, truth = _instance()
+    svc = _service(tables, truth, inflight=3, result_cache_size=0,
+                   tenant_quotas={7: 1})
+    a1 = svc.submit(_query(4), tenant=7)
+    a2 = svc.submit(_query(3), tenant=7)  # quota-blocked
+    b1 = svc.submit(_query(2), tenant=8)  # admitted past the blocked one
+    assert svc.poll(a1) == "running"
+    assert svc.poll(a2) == "queued"
+    assert svc.poll(b1) == "running"
+    assert svc.scheduler.tenant_running(7) == 1
+    assert svc.summary()["admission_queued"] == 1
+    while svc.step():
+        assert svc.scheduler.tenant_running(7) <= 1
+    assert all(svc.poll(t) == "done" for t in (a1, a2, b1))
+
+
+def test_tenant_quota_below_one_rejected():
+    """Regression: a quota of 0 could never admit its tenant's sessions —
+    run_until_idle would spin forever on the unadmittable queue."""
+    tables, _clean, truth = _instance()
+    with pytest.raises(ValueError, match="quota"):
+        _service(tables, truth, tenant_quotas={7: 0})
+    with pytest.raises(ValueError, match="default_tenant_quota"):
+        _service(tables, truth, default_tenant_quota=-1)
+
+
+def test_wfq_victim_share_improves_over_round_robin():
+    """End-to-end aggressor scenario: under unit-cost accounting the
+    victim tenant's morsel-step share while it is active improves from
+    ~1/(sessions) under rr to ~1/2 under wfq — deterministically."""
+    def run(policy):
+        tables, _clean, truth = _instance(rows=96)
+        svc = _service(tables, truth, strategy="lazy", inflight=6,
+                       result_cache_size=0, scheduler_policy=policy,
+                       cost_model="unit")
+        for _ in range(5):  # aggressor floods
+            svc.submit(_query(5), tenant=0)
+        victim = svc.submit(_query(5), tenant=1)
+        svc.run_until_idle()
+        rec = next(r for r in svc.serving.records if r.ticket == victim)
+        # share of all scheduler steps granted while the victim was in
+        # the system — clock units == steps under the unit model
+        return rec.steps / rec.turnaround_cost
+    rr_share = run("rr")
+    wfq_share = run("wfq")
+    assert wfq_share > rr_share
+    assert wfq_share >= 0.4  # ~half while both tenants active
+
+
+def test_deadline_policy_end_to_end_telemetry():
+    """Deadline classes are clocked in cost units for every policy, and
+    tenant_summary surfaces hit-rates, shares and turnaround."""
+    tables, _clean, truth = _instance()
+    svc = _service(tables, truth, strategy="lazy", inflight=4,
+                   result_cache_size=0, scheduler_policy="deadline",
+                   cost_model="unit", tenant_deadlines={1: 500.0})
+    svc.submit(_query(4), tenant=0)
+    tv = svc.submit(_query(2), tenant=1)
+    svc.run_until_idle()
+    rec = next(r for r in svc.serving.records if r.ticket == tv)
+    assert rec.deadline_met is True
+    assert rec.steps > 0 and rec.sched_cost == pytest.approx(rec.steps)
+    ts = svc.tenant_summary()
+    assert set(ts) == {0, 1}
+    assert ts[1]["deadline_hit_rate"] == 1.0
+    assert ts[0]["deadline_hit_rate"] is None  # no class configured
+    assert ts[0]["cost_share"] + ts[1]["cost_share"] == pytest.approx(1.0)
+    assert ts[1]["p95_turnaround_cost"] > 0
+    summary = svc.summary()
+    assert summary["tenants"] == 2
+    assert summary["scheduler_policy"] == "deadline"
+    assert summary["morsel_steps"] == summary["sched_cost"]  # unit model
+
+
+def test_answers_policy_independent_quick():
+    """The tentpole invariant in miniature: same workload, all three
+    policies, answers bit-identical (the fuzzer covers the full matrix)."""
+    tables, _clean, truth = _instance()
+    results = {}
+    for policy in ("rr", "wfq", "deadline"):
+        svc = _service(tables, truth, strategy="adaptive",
+                       scheduler_policy=policy, cost_model="unit",
+                       result_cache_size=0)
+        tickets = [svc.submit(q, tenant=i % 2)
+                   for i, q in enumerate(WORKLOAD)]
+        svc.run_until_idle()
+        results[policy] = [Counter(svc.answers(t)) for t in tickets]
+    assert results["rr"] == results["wfq"] == results["deadline"]
+
+
+# --------------------------------------------------------------------------- #
+# serving workload: tenant skew + per-tenant template mixes
+# --------------------------------------------------------------------------- #
+def test_serving_workload_default_stream_unchanged():
+    """Regression: with tenant_skew/tenant_mix unset the stream is
+    byte-identical to the legacy generator (draw order preserved)."""
+    import numpy as np
+
+    from repro.data.queries import serving_workload, workload
+    from repro.data.synthetic import wifi_dataset
+
+    tables, _ = wifi_dataset(n_users=50, n_wifi=300, n_occ=150)
+    n_queries, n_templates, n_tenants, skew, seed = 25, 5, 3, 1.1, 3
+    got = list(serving_workload("wifi", tables, n_queries=n_queries,
+                                n_templates=n_templates,
+                                n_tenants=n_tenants, seed=seed))
+    # the pre-QoS generator, replayed verbatim
+    templates = workload("wifi", tables, kind="random",
+                         n_queries=n_templates, seed=seed)
+    rng = np.random.default_rng(seed + 7)
+    ranks = np.arange(1, n_templates + 1, dtype=np.float64)
+    probs = ranks ** -float(skew)
+    probs /= probs.sum()
+    want = []
+    for _ in range(n_queries):
+        t_idx = int(rng.choice(n_templates, p=probs))
+        tenant = int(rng.integers(0, n_tenants))
+        want.append((tenant, templates[t_idx]))
+    assert [(t, query_signature(q)) for t, q in got] == \
+        [(t, query_signature(q)) for t, q in want]
+
+
+def test_serving_workload_tenant_skew_and_mix():
+    from repro.data.queries import serving_workload
+    from repro.data.synthetic import wifi_dataset
+
+    tables, _ = wifi_dataset(n_users=50, n_wifi=300, n_occ=150)
+    stream = list(serving_workload(
+        "wifi", tables, n_queries=60, n_templates=5, n_tenants=3, seed=3,
+        tenant_skew=2.0, tenant_mix={0: (0, 1), 2: (4,)},
+    ))
+    tenants = Counter(t for t, _q in stream)
+    # zipf over tenants: tenant 0 is the aggressor issuing most queries
+    assert tenants[0] > tenants[1] >= tenants[2]
+    sigs_by_tenant = {
+        t: {query_signature(q) for tt, q in stream if tt == t}
+        for t in tenants
+    }
+    from repro.data.queries import workload as _workload
+    pool = [query_signature(q) for q in _workload(
+        "wifi", tables, kind="random", n_queries=5, seed=3)]
+    assert sigs_by_tenant[0] <= {pool[0], pool[1]}  # pinned to its mix
+    assert sigs_by_tenant[2] <= {pool[4]}
+    # deterministic for a fixed seed
+    again = list(serving_workload(
+        "wifi", tables, n_queries=60, n_templates=5, n_tenants=3, seed=3,
+        tenant_skew=2.0, tenant_mix={0: (0, 1), 2: (4,)},
+    ))
+    assert [(t, query_signature(q)) for t, q in stream] == \
+        [(t, query_signature(q)) for t, q in again]
+    with pytest.raises(ValueError, match="tenant_mix"):
+        list(serving_workload("wifi", tables, n_queries=1, n_templates=5,
+                              n_tenants=2, tenant_mix={0: (9,)}))
+    # a mix entry for a tenant that can never be drawn is a config bug,
+    # not a silently-dead pinning
+    with pytest.raises(ValueError, match="outside range"):
+        list(serving_workload("wifi", tables, n_queries=1, n_templates=5,
+                              n_tenants=2, tenant_mix={2: (4,)}))
+
+
+# --------------------------------------------------------------------------- #
 # nearest-rank quantile (regression: banker's-rounded index)
 # --------------------------------------------------------------------------- #
 def test_nearest_rank_quantile_small_n():
