@@ -1,0 +1,166 @@
+"""Experiment 11: the threaded morsel worker pool — throughput scaling
+and the bit-identical-answers invariant under real concurrency.
+
+Setup: the exp8 skewed multi-tenant wifi stream, served by QuipService
+with ``workers`` ∈ {1, 2, 4} (threads pulling morsel steps through the
+scheduler's checkout/checkin split) against a cold serial replay.
+
+Pure-Python morsel stepping is GIL-bound, so raw relational work cannot
+scale across threads — what *does* scale is imputation inference, which
+in production blocks on a model server / native kernel that releases
+the GIL.  The workload therefore uses a KNN imputer wrapped with a
+per-invocation ``time.sleep`` (an inference-latency model that releases
+the GIL exactly like native inference would), and the scaling assertion
+is on that regime: **QPS at 4 workers ≥ 2× QPS at 1 worker**.
+
+Acceptance invariants (CI runs this experiment as a smoke check):
+
+* every pool configuration's answers are bit-identical to the cold
+  serial replay — including the full scheduler-policy × shared-impute
+  matrix at 4 workers;
+* throughput scales ≥ 2× from 1 to 4 workers.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.executor import execute_quip
+from repro.data.queries import serving_workload
+from repro.data.synthetic import wifi_dataset
+from repro.imputers.base import Imputer, ImputationService
+from repro.imputers.knn import KnnImputer
+from repro.service import QuipService
+
+NAME = "exp11_workers"
+
+STRATEGY = "lazy"
+MORSEL_ROWS = 1024
+SLEEP_S = 0.040  # per impute_attr invocation — the GIL-releasing part
+WORKER_COUNTS = (1, 2, 4)
+POLICIES = ("rr", "wfq", "deadline")
+
+
+class _InferenceLatencyImputer(Imputer):
+    """KNN with a fixed per-invocation sleep, modeling a model server /
+    native inference call that releases the GIL while it runs."""
+
+    def __init__(self, sleep_s: float = SLEEP_S):
+        self._inner = KnnImputer(k=5, cost_per_value=2e-3)
+        self._sleep_s = sleep_s
+        self.blocking = self._inner.blocking
+        self.cost_per_value = self._inner.cost_per_value
+        self.train_cost = self._inner.train_cost
+
+    def fit(self, table) -> None:
+        self._inner.fit(table)
+
+    def impute_attr(self, table, attr: str, tids: np.ndarray) -> np.ndarray:
+        time.sleep(self._sleep_s)
+        return self._inner.impute_attr(table, attr, tids)
+
+
+def _factory() -> Imputer:
+    return _InferenceLatencyImputer()
+
+
+def _serial(stream, tables) -> Dict:
+    answers = []
+    t0 = time.perf_counter()
+    for _tenant, q in stream:
+        eng = ImputationService(
+            {t: tables[t].copy() for t in q.tables}, default=_factory
+        )
+        res = execute_quip(q, tables, eng, strategy=STRATEGY,
+                           morsel_rows=MORSEL_ROWS)
+        answers.append(sorted(res.answer_tuples()))
+    wall = time.perf_counter() - t0
+    return {
+        "mode": "serial", "workers": 0, "policy": "-", "shared": 0,
+        "queries": len(stream), "wall_s": round(wall, 4),
+        "qps": round(len(stream) / wall, 2), "_answers": answers,
+    }
+
+
+def _pooled(stream, tables, workers: int, policy: str = "rr",
+            shared: bool = False) -> Dict:
+    # result cache off: repeated templates must re-execute, or the pool
+    # has nothing to parallelize and QPS measures cache lookups
+    svc = QuipService(
+        tables, _factory, strategy=STRATEGY, morsel_rows=MORSEL_ROWS,
+        shared_impute=shared, max_inflight=8, result_cache_size=0,
+        scheduler_policy=policy, workers=workers,
+    )
+    t0 = time.perf_counter()
+    tickets = [svc.submit(q, tenant=tenant) for tenant, q in stream]
+    svc.run_until_idle()
+    wall = time.perf_counter() - t0
+    answers = [sorted(svc.answers(t)) for t in tickets]
+    summary = svc.summary()
+    svc.close()
+    assert summary["failed"] == 0, f"pool run failed queries: {summary}"
+    return {
+        "mode": f"pool{workers}_{policy}" + ("_shared" if shared else ""),
+        "workers": workers, "policy": policy, "shared": int(shared),
+        "queries": len(stream), "wall_s": round(wall, 4),
+        "qps": round(len(stream) / wall, 2), "_answers": answers,
+    }
+
+
+def run(fast: bool = True) -> List[Dict]:
+    if fast:
+        tables, _ = wifi_dataset(n_users=100, n_wifi=1200, n_occ=600)
+        n_queries = 16
+    else:
+        tables, _ = wifi_dataset(n_users=150, n_wifi=2000, n_occ=1000)
+        n_queries = 32
+    stream = list(serving_workload("wifi", tables, n_queries=n_queries,
+                                   n_templates=6, n_tenants=4, seed=5))
+
+    rows = [_serial(stream, tables)]
+    # throughput scaling: isolation + rr so the only cross-thread
+    # serialization is the scheduler checkout, not the shared store
+    for workers in WORKER_COUNTS:
+        rows.append(_pooled(stream, tables, workers))
+    # answer matrix at 4 workers: every policy × sharing mode must stay
+    # bit-identical to the cold serial replay
+    for policy in POLICIES:
+        for shared in (False, True):
+            if policy == "rr" and not shared:
+                continue  # already measured in the scaling sweep
+            rows.append(_pooled(stream, tables, 4, policy, shared))
+
+    serial_answers = rows[0].pop("_answers")
+    for r in rows[1:]:
+        r["answers_match_serial"] = int(r.pop("_answers") == serial_answers)
+    return rows
+
+
+def derived(rows: List[Dict]) -> Dict[str, float]:
+    by_mode = {r["mode"]: r for r in rows}
+    qps1 = by_mode["pool1_rr"]["qps"]
+    qps2 = by_mode["pool2_rr"]["qps"]
+    qps4 = by_mode["pool4_rr"]["qps"]
+    matches = [r["answers_match_serial"] for r in rows[1:]]
+    # acceptance invariants
+    assert all(matches), (
+        "pool answers diverged from serial replay: "
+        f"{[r['mode'] for r in rows[1:] if not r['answers_match_serial']]}"
+    )
+    assert qps4 >= 2.0 * qps1, (
+        f"worker pool failed to scale: qps1={qps1} qps4={qps4} "
+        f"({qps4 / max(qps1, 1e-9):.2f}x < 2x)"
+    )
+    return {
+        "workers_qps_serial": by_mode["serial"]["qps"],
+        "workers_qps_1": qps1,
+        "workers_qps_2": qps2,
+        "workers_qps_4": qps4,
+        "workers_scaling_4v1": round(qps4 / max(qps1, 1e-9), 2),
+        "workers_scaling_2v1": round(qps2 / max(qps1, 1e-9), 2),
+        "workers_answers_match": float(all(matches)),
+        "workers_configs_verified": float(len(matches)),
+    }

@@ -24,6 +24,7 @@ from benchmarks import (
     exp8_serving,
     exp9_result_cache,
     exp10_qos,
+    exp11_workers,
     kernels_micro,
 )
 
@@ -38,6 +39,7 @@ MODULES = [
     exp8_serving,
     exp9_result_cache,
     exp10_qos,
+    exp11_workers,
     kernels_micro,
 ]
 

@@ -10,6 +10,8 @@ missing counter is zero (paper §4, last paragraph).
 
 from __future__ import annotations
 
+import threading
+
 import numpy as np
 
 from repro.kernels import ops as kops
@@ -26,6 +28,10 @@ class BloomFilter:
         self.bits = np.zeros((1 << self.log2m) // 32, dtype=np.uint32)
         self.n_inserted = 0
         self.complete = False  # BFC(attr)
+        # ``np.bitwise_or.at`` is a read-modify-write over shared words;
+        # concurrent inserts from sibling parallel morsels would lose bits
+        # (→ false negatives → wrong pruning), so inserts serialize
+        self._lock = threading.Lock()
 
     # ------------------------------------------------------------------ #
     def insert(self, keys: np.ndarray) -> None:
@@ -35,8 +41,9 @@ class BloomFilter:
         pos = hash_positions_np(keys, self.num_hashes, self.log2m).ravel()
         word = (pos >> np.uint32(5)).astype(np.int64)
         bit = (np.uint32(1) << (pos & np.uint32(31))).astype(np.uint32)
-        np.bitwise_or.at(self.bits, word, bit)
-        self.n_inserted += len(keys)
+        with self._lock:
+            np.bitwise_or.at(self.bits, word, bit)
+            self.n_inserted += len(keys)
 
     def might_contain(self, keys: np.ndarray, impl=None) -> np.ndarray:
         keys = np.asarray(keys)

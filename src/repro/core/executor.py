@@ -140,6 +140,11 @@ class QuipExecutor:
         # morsel pipeline is provably order-insensitive (see _join / _rho)
         self.batching = bool(getattr(engine, "batching", False))
         self._scan_whole = False  # build-side materialization flag
+        # intra-query morsel parallelism: the serving layer's worker pool
+        # injects a runner ``(fn, items) -> [fn(x) for x in items]`` that
+        # fans sibling morsels of join-free Scan/Select subtrees across
+        # worker threads (order-preserving).  None = serial (seed path).
+        self.task_runner = None
 
         ta = _table_attrs(tables)
         self.root = rewrite_for_quip(plan, query, ta)
@@ -318,14 +323,12 @@ class QuipExecutor:
         rows, tids = rows[ok_tid], tids[ok_tid]
         if len(rows) == 0:
             return rows, rows
-        # operator boundary = decision point: queue this group's tids and
-        # flush immediately (the operator needs the values to verify).
-        # Cross-morsel coalescing happens upstream — whole-relation build
-        # sides and ρ deferral hand larger groups to this call — while the
-        # columnar cache dedups repeated requests across pipeline copies.
-        self.engine.enqueue(t, attr, tids)
-        self.engine.flush()
-        values = self.engine.lookup(t, attr, tids)
+        # operator boundary = decision point: impute this group's tids now
+        # (the operator needs the values to verify).  Cross-morsel
+        # coalescing happens upstream — whole-relation build sides and ρ
+        # deferral hand larger groups to this call — while the columnar
+        # cache dedups repeated requests across pipeline copies.
+        values = self._request_values(t, attr, tids)
         passed = verify_values(node, attr, values)
         if extra_check is not None:
             passed &= extra_check.evaluate_values(values)
@@ -339,6 +342,23 @@ class QuipExecutor:
         self.record_imputed(attr, tids)
         self.maybe_complete_bloom(attr)
         return rows[passed], rows[~passed]
+
+    def _request_values(self, table: str, attr: str,
+                        tids: np.ndarray) -> np.ndarray:
+        """One imputed batch at an operator boundary.
+
+        Routes through :meth:`ImputationService.request` — atomic dedup +
+        compute + gather under the store's per-key lock, so concurrent
+        sibling morsels (and concurrent sessions over a shared store)
+        cannot interleave each other's enqueue→flush→lookup triples.
+        Counter semantics match the serial triple exactly; a bare engine
+        without ``request`` falls back to it."""
+        request = getattr(self.engine, "request", None)
+        if request is not None:
+            return request(table, attr, tids)
+        self.engine.enqueue(table, attr, tids)
+        self.engine.flush()
+        return self.engine.lookup(table, attr, tids)
 
     # ------------------------------------------------------------------ #
     # operator streams
@@ -358,6 +378,68 @@ class QuipExecutor:
             yield from self._rho(node)
         else:  # pragma: no cover - Π/γ handled at top level
             raise TypeError(type(node))
+
+    def _parallel_chain(
+        self, node: PlanNode
+    ) -> Optional[Tuple[List[SelectNode], ScanNode]]:
+        """``(selects top-down, scan)`` when ``node`` is a join-free
+        Select*(Scan) chain — the shape whose sibling morsels are
+        independent and safe to fan out — else None."""
+        sels: List[SelectNode] = []
+        cur = node
+        while isinstance(cur, SelectNode):
+            sels.append(cur)
+            cur = cur.children[0]
+        if isinstance(cur, ScanNode) and sels:
+            return sels, cur
+        return None
+
+    def _select_chain(self, sels: List[SelectNode],
+                      morsel: MaskedRelation) -> Tuple[MaskedRelation, int]:
+        """Run one morsel through a Select chain (bottom-up); returns the
+        surviving morsel and the temp-tuple count the serial stream would
+        have charged (added by the owner thread, not here — counters are
+        not fan-out-safe)."""
+        temp = 0
+        for s in reversed(sels):
+            morsel = self._select(s, morsel)
+            if morsel.num_rows == 0:
+                return morsel, temp
+            temp += morsel.num_rows
+        return morsel, temp
+
+    def _stream_subtree(self, node: PlanNode) -> Iterator[MaskedRelation]:
+        """Morsel stream of an operand subtree, fanning sibling morsels
+        across the worker pool when a task runner is attached.
+
+        Only join-free Scan/Select chains parallelize: their morsels are
+        mutually independent (σ̂ imputes through the engine's atomic
+        ``request``, bloom inserts are locked, liveness updates are
+        per-tid discards), and output order is preserved so the stream is
+        a permutation-free drop-in for ``_stream``.  Everything else —
+        join spines, ρ — keeps the serial generator path, which is what
+        makes answers thread-count-independent (see docs/serving.md
+        "Worker pool & thread safety")."""
+        runner = self.task_runner
+        chain = (
+            self._parallel_chain(node)
+            if runner is not None and not self._scan_whole else None
+        )
+        if chain is None:
+            yield from self._stream(node)
+            return
+        sels, scan = chain
+        chunks = list(self._scan(scan))
+        if len(chunks) <= 1:
+            results = [self._select_chain(sels, m) for m in chunks]
+        else:
+            results = runner(
+                lambda m: self._select_chain(sels, m), chunks
+            )
+        for out, temp in results:
+            self.counters.temp_tuples += temp
+            if out.num_rows:
+                yield out
 
     # -- scan ------------------------------------------------------------- #
     def _scan(self, node: ScanNode) -> Iterator[MaskedRelation]:
@@ -432,7 +514,9 @@ class QuipExecutor:
         ):
             self._scan_whole = True
         try:
-            parts = list(self._stream(node.children[1]))
+            # build-side subtrees fan out across the worker pool when one
+            # is attached (morsel-parallel materialization)
+            parts = list(self._stream_subtree(node.children[1]))
         finally:
             self._scan_whole = prev_whole
         build = (
@@ -470,7 +554,7 @@ class QuipExecutor:
 
         # ---- probe (left) side: stream --------------------------------- #
         first = True
-        for morsel in self._stream(node.children[0]):
+        for morsel in self._stream_subtree(node.children[0]):
             morsel = self._prepare_join_side(node, js, "L", l_attr, morsel)
             js.append_snapshot("L", morsel)
             if morsel.num_rows == 0:
@@ -558,7 +642,7 @@ class QuipExecutor:
 
     # -- ρ ------------------------------------------------------------------#
     def _rho(self, node: RhoNode) -> Iterator[MaskedRelation]:
-        for morsel in self._stream(node.children[0]):
+        for morsel in self._stream_subtree(node.children[0]):
             if self._defer_rho:
                 # park unprocessed: the fixpoint below imputes the whole
                 # pool with one flush per attribute (cross-morsel batching)
@@ -720,9 +804,7 @@ class QuipExecutor:
                 tids.update(st[m & (st >= 0)].tolist())
         if tids:
             arr = np.array(sorted(tids), dtype=np.int64)
-            self.engine.enqueue(t, attr, arr)
-            self.engine.flush()
-            values = self.engine.lookup(t, attr, arr)
+            values = self._request_values(t, attr, arr)
             owner = next(
                 (n for n in self.join_nodes
                  if attr in self.join_attrs[n.node_id]),
@@ -809,7 +891,7 @@ class QuipExecutor:
             body = top
 
         chunks: List[MaskedRelation] = []
-        stream = self._stream(body)
+        stream = self._stream_subtree(body)
         while True:
             t0 = time.perf_counter()
             try:

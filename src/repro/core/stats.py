@@ -190,14 +190,20 @@ class QueryRecord:
     # -- QoS scheduling accounting (see service/scheduler.py) ----------- #
     steps: int = 0  # morsel steps the scheduler granted
     sched_cost: float = 0.0  # cost charged under the scheduler's model
-    admit_clock: float = 0.0  # scheduler clock at admission
-    finish_clock: float = 0.0  # scheduler clock at completion
+    # None = never admitted (cancelled in the queue / failed at setup) —
+    # distinct from "admitted at clock 0.0"
+    admit_clock: Optional[float] = None  # scheduler clock at admission
+    finish_clock: Optional[float] = None  # scheduler clock at completion
     deadline_met: Optional[bool] = None  # None: no deadline class
 
     @property
-    def turnaround_cost(self) -> float:
+    def turnaround_cost(self) -> Optional[float]:
         """Admission → completion on the scheduler's cost clock (steps
-        under the ``unit`` model — wall-clock-free p95s)."""
+        under the ``unit`` model — wall-clock-free p95s).  ``None`` for
+        work that was never admitted: a cancelled queued session has no
+        turnaround, and reporting 0.0 would drag quantiles toward zero."""
+        if self.admit_clock is None or self.finish_clock is None:
+            return None
         return max(0.0, self.finish_clock - self.admit_clock)
 
     def as_dict(self) -> Dict[str, object]:
@@ -259,7 +265,12 @@ class ServingStats:
         out: Dict[Optional[int], Dict[str, float]] = {}
         for tenant, recs in by_tenant.items():
             latencies = [r.latency_s for r in recs]
-            turnarounds = [r.turnaround_cost for r in recs if r.steps]
+            # unadmitted records (turnaround None) carry no turnaround —
+            # including them as 0.0 would reward cancelling queued work
+            turnarounds = [
+                r.turnaround_cost for r in recs
+                if r.steps and r.turnaround_cost is not None
+            ]
             deadlined = [r for r in recs if r.deadline_met is not None]
             cost = sum(r.sched_cost for r in recs)
             out[tenant] = {

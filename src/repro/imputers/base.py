@@ -31,6 +31,7 @@ query B (see ``docs/serving.md`` for the consistency argument).
 
 from __future__ import annotations
 
+import threading
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -73,6 +74,36 @@ def _resolve_batching(batching: Optional[bool]) -> bool:
     return env_flag("QUIP_IMPUTE_BATCH", True)
 
 
+class _KeyLock:
+    """Non-reentrant per-(table, attr) flush lock.
+
+    Serializes cross-thread flushes of one column (the worker pool's
+    "computed once" guarantee) while failing loud — instead of
+    deadlocking — if an imputer recursively requests the very attribute
+    it is computing on the same thread."""
+
+    __slots__ = ("_lock", "_owner")
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._owner: Optional[int] = None
+
+    def __enter__(self) -> "_KeyLock":
+        me = threading.get_ident()
+        if self._owner == me:
+            raise RuntimeError(
+                "reentrant flush of one (table, attr) — an imputer must "
+                "not request the attribute it is currently computing"
+            )
+        self._lock.acquire()
+        self._owner = me
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self._owner = None
+        self._lock.release()
+
+
 class ImputeStore:
     """Dense imputation state, extracted from the service so it can outlive
     (and be shared between) queries.
@@ -85,14 +116,17 @@ class ImputeStore:
     seed semantics); ``repro.service.impute_store.SharedImputeStore`` binds
     one store to many per-query services.
 
-    Flush discipline: the store is written only inside
-    ``ImputationService.flush``, and the serving scheduler interleaves
-    executors at morsel granularity — every enqueue→flush→lookup sequence
-    runs within one scheduler step, so store writes are serialized.  The
-    ``begin_flush``/``end_flush`` guard turns any violation of that
-    discipline (a reentrant or genuinely concurrent flush) into a loud
-    error instead of a silent lost update.
-    """
+    Flush discipline (thread-safe since the worker pool): store writes
+    happen only under a per-(table, attr) :class:`_KeyLock`
+    (:meth:`flush_lock`), so two worker threads flushing the same column
+    serialize — the second finds the cells filled and computes nothing —
+    while different columns flush in parallel.  Multi-key queue flushes
+    (``ImputationService.flush``) additionally serialize store-wide through
+    ``begin_flush``/``end_flush``, now a real :class:`threading.Lock`:
+    a concurrent flush *blocks* and a same-thread reentrant flush (an
+    imputer calling ``flush`` from inside ``impute_attr``) still raises
+    loudly instead of deadlocking.  Registry metadata (cache / model /
+    lock registries) is guarded by a separate meta lock."""
 
     def __init__(self, tables: Dict[str, MaskedRelation],
                  track_owners: bool = False):
@@ -103,19 +137,29 @@ class ImputeStore:
         self._owner: Dict[Tuple[str, str], np.ndarray] = {}
         self._models: Dict[Tuple[str, str], Imputer] = {}
         self._fitted: set = set()
-        self._in_flush = False
+        # registry metadata guard: dict/set mutation only, never held
+        # across model fits or imputations
+        self._meta_lock = threading.Lock()
+        # store-wide multi-key flush serialization + reentrancy detection
+        self._flush_serial = threading.Lock()
+        self._flush_owner: Optional[int] = None
+        self._key_locks: Dict[Tuple[str, str], _KeyLock] = {}
 
     # -- column caches ----------------------------------------------------#
     def column_cache(self, table: str, attr: str
                      ) -> Tuple[np.ndarray, np.ndarray]:
         key = (table, attr)
-        if key not in self._values:
-            n = self.tables[table].num_rows
-            self._values[key] = np.zeros(n, dtype=np.float64)
-            self._filled[key] = np.zeros(n, dtype=bool)
-            if self.track_owners:
-                self._owner[key] = np.full(n, -1, dtype=np.int32)
-        return self._values[key], self._filled[key]
+        vals = self._values.get(key)
+        if vals is not None:
+            return vals, self._filled[key]
+        with self._meta_lock:
+            if key not in self._values:
+                n = self.tables[table].num_rows
+                self._values[key] = np.zeros(n, dtype=np.float64)
+                self._filled[key] = np.zeros(n, dtype=bool)
+                if self.track_owners:
+                    self._owner[key] = np.full(n, -1, dtype=np.int32)
+            return self._values[key], self._filled[key]
 
     def owners(self, table: str, attr: str) -> Optional[np.ndarray]:
         return self._owner.get((table, attr))
@@ -130,14 +174,18 @@ class ImputeStore:
 
     def filled_cells(self) -> int:
         """Total imputed cells in the store (serving telemetry)."""
-        return int(sum(m.sum() for m in self._filled.values()))
+        with self._meta_lock:
+            masks = list(self._filled.values())
+        return int(sum(m.sum() for m in masks))
 
     def snapshot_tids(self, table: Optional[str] = None
                       ) -> Dict[Tuple[str, str], np.ndarray]:
         """Filled base-row ids per ``(table, attr)`` (uncast values live in
         the dense cache; callers cast via the service)."""
         out: Dict[Tuple[str, str], np.ndarray] = {}
-        for (t, a), filled in self._filled.items():
+        with self._meta_lock:
+            items = list(self._filled.items())
+        for (t, a), filled in items:
             if table is not None and t != table:
                 continue
             tids = np.nonzero(filled)[0].astype(np.int64)
@@ -159,27 +207,48 @@ class ImputeStore:
         touch, and models refit on the mutated table.  Returns the number
         of cached cells dropped (invalidation telemetry)."""
         dropped = 0
-        for key in [k for k in self._values if k[0] == table]:
-            dropped += int(self._filled[key].sum())
-            del self._values[key]
-            del self._filled[key]
-            self._owner.pop(key, None)
-        for key in [k for k in self._models if k[0] == table]:
-            del self._models[key]
-        self._fitted = {fk for fk in self._fitted if fk[0] != table}
+        with self._meta_lock:
+            for key in [k for k in self._values if k[0] == table]:
+                dropped += int(self._filled[key].sum())
+                del self._values[key]
+                del self._filled[key]
+                self._owner.pop(key, None)
+            for key in [k for k in self._models if k[0] == table]:
+                del self._models[key]
+            self._fitted = {fk for fk in self._fitted if fk[0] != table}
         return dropped
 
-    # -- flush guard ------------------------------------------------------#
+    # -- flush locks ------------------------------------------------------#
+    def flush_lock(self, table: str, attr: str) -> _KeyLock:
+        """The per-(table, attr) lock every store write of that column
+        must run under — same-key flushes serialize (and re-dedup against
+        the filled mask, so each cell is computed once), different keys
+        proceed in parallel."""
+        key = (table, attr)
+        lock = self._key_locks.get(key)
+        if lock is not None:
+            return lock
+        with self._meta_lock:
+            return self._key_locks.setdefault(key, _KeyLock())
+
     def begin_flush(self) -> None:
-        if self._in_flush:
+        """Serialize a store-wide (multi-key) flush.  A concurrent flush
+        from another thread blocks; a *reentrant* flush on the same thread
+        (an imputer calling ``flush`` from inside ``impute_attr``) raises
+        loudly — the pre-pool guard, now backed by a real lock instead of
+        a boolean."""
+        me = threading.get_ident()
+        if self._flush_owner == me:
             raise RuntimeError(
                 "concurrent/reentrant flush against a shared ImputeStore — "
                 "flushes must be serialized (one scheduler step at a time)"
             )
-        self._in_flush = True
+        self._flush_serial.acquire()
+        self._flush_owner = me
 
     def end_flush(self) -> None:
-        self._in_flush = False
+        self._flush_owner = None
+        self._flush_serial.release()
 
     # -- model registry ---------------------------------------------------#
     def model_for(self, table: str, attr: str,
@@ -190,18 +259,28 @@ class ImputeStore:
         where ``train_wall`` is the fit's wall seconds on the call that
         trained it and ``None`` otherwise (the caller charges training cost
         to its own query's counters — under a shared store only the first
-        query pays)."""
+        query pays).
+
+        Callers hold the key's :meth:`flush_lock`, which serializes the
+        fit of a given (table, attr) model; only the registry dicts need
+        the meta lock.  (A single ``per_attr`` Imputer instance shared
+        across *tables* would fit concurrently — per-attr injection is a
+        per-table construct; don't share instances across threads.)"""
         key = (table, attr)
-        if key not in self._models:
-            self._models[key] = per_attr.get(attr) or default()
-        model = self._models[key]
-        fit_key = (table, id(model))
+        with self._meta_lock:
+            model = self._models.get(key)
+            if model is None:
+                model = per_attr.get(attr) or default()
+                self._models[key] = model
+            fit_key = (table, id(model))
+            need_fit = fit_key not in self._fitted
+            if need_fit:
+                self._fitted.add(fit_key)
         train_wall: Optional[float] = None
-        if fit_key not in self._fitted:
+        if need_fit:
             t0 = time.perf_counter()
             model.fit(self.tables[table])
             train_wall = time.perf_counter() - t0
-            self._fitted.add(fit_key)
         return model, train_wall
 
 
@@ -223,6 +302,15 @@ class ImputationService:
     and ``counters.imputations`` are unchanged — only the *number of model
     invocations* (``counters.impute_batches``) shrinks when call sites
     enqueue several morsels before flushing.
+
+    :meth:`request` is the thread-safe form of that triple: one (table,
+    attr) batch deduplicated, computed, and gathered atomically under the
+    store's per-key flush lock.  The queue API is *not* safe under
+    concurrent sibling morsels (thread B's ``flush`` could swap the queue
+    and still be computing when thread A's ``lookup`` runs), so the
+    morsel-parallel executor routes every operator-boundary imputation
+    through ``request``; the queue remains for single-threaded
+    cross-operator coalescing (``execute_offline``).
     """
 
     def __init__(
@@ -250,6 +338,11 @@ class ImputationService:
         # (always per-service — only flushed results land in the store)
         self._queue: Dict[Tuple[str, str], List[np.ndarray]] = {}
         self.simulated_seconds: float = 0.0
+        # queue swap guard + telemetry guard: intra-query parallel morsels
+        # share this service, and lost counter updates would corrupt the
+        # imputations/flushes accounting the benchmarks assert on
+        self._qlock = threading.Lock()
+        self._tel_lock = threading.Lock()
 
     # ------------------------------------------------------------------ #
     def _model_for(self, table: str, attr: str) -> Imputer:
@@ -257,8 +350,11 @@ class ImputationService:
             table, attr, self._default, self._per_attr
         )
         if train_wall is not None and model.blocking:
-            self.simulated_seconds += model.train_cost
-            self.counters.imputation_seconds += train_wall + model.train_cost
+            with self._tel_lock:
+                self.simulated_seconds += model.train_cost
+                self.counters.imputation_seconds += (
+                    train_wall + model.train_cost
+                )
         return model
 
     def _column_cache(self, table: str, attr: str
@@ -287,53 +383,69 @@ class ImputationService:
         tids = np.asarray(tids, dtype=np.int64)
         if len(tids) == 0:
             return
-        self._queue.setdefault((table, attr), []).append(tids)
+        with self._qlock:
+            self._queue.setdefault((table, attr), []).append(tids)
 
     def pending_requests(self) -> int:
         """Queued (pre-dedup) request count — flush/batch telemetry."""
-        return sum(len(t) for parts in self._queue.values() for t in parts)
+        with self._qlock:
+            return sum(
+                len(t) for parts in self._queue.values() for t in parts
+            )
+
+    def _flush_key(self, table: str, attr: str, tids: np.ndarray) -> None:
+        """Dedup-compute-fill one (table, attr) batch.  Caller holds the
+        store's per-key flush lock; the dedup against the filled mask runs
+        *under* it, so a concurrent same-key flush that lost the race finds
+        the cells filled and computes nothing — each cell is paid for once
+        no matter how many threads request it."""
+        requested = len(tids)
+        values, filled = self._column_cache(table, attr)
+        uniq = np.unique(tids)  # vectorized dedup (sorted, unique)
+        hit_mask = filled[uniq]
+        todo = uniq[~hit_mask]
+        owners = self.store.owners(table, attr)
+        if owners is not None and hit_mask.any():
+            # cells another query already paid for (serving telemetry)
+            hits = uniq[hit_mask]
+            cross = int((owners[hits] != self.owner_id).sum())
+            with self._tel_lock:
+                self.counters.impute_cross_hits += cross
+        if len(todo) == 0:
+            return
+        model = self._model_for(table, attr)
+        t0 = time.perf_counter()
+        vals = np.asarray(
+            model.impute_attr(self.tables[table], attr, todo),
+            dtype=np.float64,
+        )
+        wall = time.perf_counter() - t0
+        sim = model.cost_per_value * len(todo)
+        with self._tel_lock:
+            self.simulated_seconds += sim
+            self.counters.imputations += len(todo)
+            self.counters.impute_batches += 1
+            self.counters.imputation_seconds += wall + sim
+            self.stats.record_imputation(attr, len(todo), wall + sim)
+            self.stats.record_flush(attr, requested, len(todo))
+        self.store.fill(table, attr, todo, vals, self.owner_id)
 
     def flush(self) -> None:
         """Coalesce the queue: per (table, attr), one deduplicated batch
         through the model; results land in the dense column cache (the
         service's private store, or an injected shared one)."""
-        if not self._queue:
-            return
-        queue, self._queue = self._queue, {}
-        self.counters.impute_flushes += 1
+        with self._qlock:
+            if not self._queue:
+                return
+            queue, self._queue = self._queue, {}
+        with self._tel_lock:
+            self.counters.impute_flushes += 1
         self.store.begin_flush()
         try:
             for (table, attr), parts in queue.items():
                 tids = parts[0] if len(parts) == 1 else np.concatenate(parts)
-                requested = len(tids)
-                values, filled = self._column_cache(table, attr)
-                uniq = np.unique(tids)  # vectorized dedup (sorted, unique)
-                hit_mask = filled[uniq]
-                todo = uniq[~hit_mask]
-                owners = self.store.owners(table, attr)
-                if owners is not None and hit_mask.any():
-                    # cells another query already paid for (serving telemetry)
-                    hits = uniq[hit_mask]
-                    self.counters.impute_cross_hits += int(
-                        (owners[hits] != self.owner_id).sum()
-                    )
-                if len(todo) == 0:
-                    continue
-                model = self._model_for(table, attr)
-                t0 = time.perf_counter()
-                vals = np.asarray(
-                    model.impute_attr(self.tables[table], attr, todo),
-                    dtype=np.float64,
-                )
-                wall = time.perf_counter() - t0
-                sim = model.cost_per_value * len(todo)
-                self.simulated_seconds += sim
-                self.counters.imputations += len(todo)
-                self.counters.impute_batches += 1
-                self.counters.imputation_seconds += wall + sim
-                self.stats.record_imputation(attr, len(todo), wall + sim)
-                self.stats.record_flush(attr, requested, len(todo))
-                self.store.fill(table, attr, todo, vals, self.owner_id)
+                with self.store.flush_lock(table, attr):
+                    self._flush_key(table, attr, tids)
         finally:
             self.store.end_flush()
 
@@ -347,6 +459,31 @@ class ImputationService:
                 f"{tids[~filled[tids]][:8].tolist()} (flush() missing?)"
             )
         return self._cast(table, attr, values[tids])
+
+    def request(self, table: str, attr: str, tids: np.ndarray) -> np.ndarray:
+        """Atomic enqueue+flush+lookup for one ``(table, attr)`` batch.
+
+        The morsel-parallel executor's operator boundary: sibling morsels
+        of one query — and sessions running on other worker threads over a
+        shared store — may impute concurrently, and the shared request
+        queue cannot give read-your-writes under that interleaving (a
+        sibling's ``flush`` can swap the queue and still be mid-compute at
+        this thread's ``lookup``).  Here dedup, model invocation, fill,
+        and the gather all run under the store's per-key flush lock, with
+        counter semantics identical to the serial triple."""
+        tids = np.asarray(tids, dtype=np.int64)
+        if len(tids) == 0:
+            return self.lookup(table, attr, tids)
+        with self.store.flush_lock(table, attr):
+            with self._tel_lock:
+                self.counters.impute_flushes += 1
+            self._flush_key(table, attr, tids)
+            values, filled = self._column_cache(table, attr)
+            if not filled[tids].all():  # pragma: no cover - invariant
+                raise KeyError(
+                    f"request left unimputed tids for {table}.{attr}"
+                )
+            return self._cast(table, attr, values[tids])
 
     # ------------------------------------------------------------------ #
     def impute(self, table: str, attr: str, tids: np.ndarray) -> np.ndarray:

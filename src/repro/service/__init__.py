@@ -9,6 +9,7 @@ Layers (see docs/serving.md):
 * :mod:`repro.service.plan_cache`   — LRU plan cache (canonical signatures)
 * :mod:`repro.service.result_cache` — answer cache keyed on table epochs
 * :mod:`repro.service.impute_store` — cross-query imputation sharing
+* :mod:`repro.service.workers`      — threaded morsel worker pool
 """
 
 from repro.service.impute_store import SharedImputeStore, resolve_shared_impute
@@ -18,10 +19,12 @@ from repro.service.result_cache import ResultCache
 from repro.service.scheduler import COST_MODELS, POLICIES, MorselScheduler
 from repro.service.server import QuipService
 from repro.service.session import QuerySession
+from repro.service.workers import WorkerPool
 
 __all__ = [
     "QuipService",
     "QuerySession",
+    "WorkerPool",
     "MorselScheduler",
     "POLICIES",
     "COST_MODELS",

@@ -21,10 +21,17 @@ Consistency argument (docs/serving.md expands on this):
   counters shrink.  The equivalence tests in tests/test_service.py assert
   exactly this.
 
-Flush discipline: the serving scheduler interleaves executors at morsel
-granularity on one thread, and every enqueue→flush→lookup sequence happens
-within a single scheduler step, so store writes never interleave.  The
-store's ``begin_flush`` guard enforces this (a reentrant flush raises).
+Flush discipline: the store is thread-safe.  Executors resolve missing
+cells through the atomic ``ImputationService.request`` — dedup, model
+fit, compute, fill, and gather all run under that key's flush lock
+(``ImputeStore.flush_lock``), so concurrent worker-pool sessions (and
+sibling parallel morsels of one query) serialize per (table, attr) and
+never observe a half-filled batch.  Whole-queue ``flush`` additionally
+serializes store-wide via ``begin_flush``/``end_flush``; a *same-thread*
+reentrant flush (an imputer requesting the very attribute it is
+computing) still fails loud instead of deadlocking.  Metadata (cache
+creation, invalidation, snapshots) sits under a separate short-lived
+meta lock; lock order is always flush-serial → key lock → meta lock.
 
 Gating: per-query isolation is the safe default; sharing is enabled by
 constructing QuipService with ``shared_impute=True`` or by setting

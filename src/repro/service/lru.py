@@ -19,11 +19,22 @@ class LruCache:
 
     Subclasses implement :meth:`_key_tables` — the base tables an entry
     was derived from — so :meth:`invalidate_table` can purge everything a
-    registry mutation staled."""
+    registry mutation staled.
+
+    ``capacity=0`` disables the cache uniformly: every ``lookup`` is a
+    counted miss and ``insert`` is a no-op, so call sites need no special
+    casing (``QuipService(plan_cache_size=0)`` / ``result_cache_size=0``
+    both mean "cache off").  Negative capacities raise :class:`ValueError`
+    — a real exception, not an ``assert`` that ``python -O`` strips."""
 
     def __init__(self, capacity: int):
-        assert capacity >= 1
-        self.capacity = int(capacity)
+        capacity = int(capacity)
+        if capacity < 0:
+            raise ValueError(
+                f"cache capacity must be >= 0 (0 disables the cache), "
+                f"got {capacity}"
+            )
+        self.capacity = capacity
         self._entries: OrderedDict = OrderedDict()
         self.hits = 0
         self.misses = 0
@@ -44,6 +55,8 @@ class LruCache:
         return None
 
     def insert(self, key, value) -> None:
+        if self.capacity == 0:  # disabled: hold nothing, evict nothing
+            return
         self._entries[key] = value
         self._entries.move_to_end(key)
         while len(self._entries) > self.capacity:

@@ -116,8 +116,25 @@ class TableRegistry(Mapping):
         self._tables[table] = build(self._tables[table])
         self._epochs[table] += 1
         self._global_epoch += 1
+        # The mutation is committed and the epoch has advanced: every
+        # subscriber MUST observe it, even if an earlier after-hook raises —
+        # otherwise later subscribers keep serving stale plans/answers whose
+        # epoch keys claim freshness.  Run them all, then re-raise.
+        errors = []
         for _before, after in self._subscribers:
-            after(table)
+            try:
+                after(table)
+            except Exception as e:
+                errors.append(e)
+        if errors:
+            if len(errors) == 1:
+                raise errors[0]
+            agg = RuntimeError(
+                f"{len(errors)} post-commit subscribers failed for "
+                f"table {table!r}: "
+                f"{[f'{type(e).__name__}: {e}' for e in errors]}"
+            )
+            raise agg from errors[0]
 
     @staticmethod
     def _check_rows(rel: MaskedRelation, rows: np.ndarray) -> np.ndarray:

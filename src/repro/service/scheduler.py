@@ -130,6 +130,13 @@ class MorselScheduler:
         self._run_by_tenant: Counter = Counter()
         self._tenant_steps: Counter = Counter()
         self._tenant_cost: Counter = Counter()
+        # sessions popped by next_session() and not yet checked back in —
+        # the worker pool steps them off-lock; they stay visible to
+        # sessions() (the mutation veto must see in-flight readers) and
+        # keep their tenant's WFQ state active
+        self._checked_out: set = set()
+        self._out_by_tenant: Counter = Counter()
+        self._edf_keys: Dict[int, tuple] = {}  # ticket -> (deadline, seq)
 
     # ------------------------------------------------------------------ #
     # introspection
@@ -139,11 +146,18 @@ class MorselScheduler:
         return self._nrun
 
     def sessions(self) -> List[QuerySession]:
+        """Every admitted-but-unfinished session — queued *and* checked
+        out (a session being stepped on a worker thread is still reading
+        its tables; the mutation veto depends on seeing it)."""
         if self.policy == "rr":
-            return list(self._ring)
-        if self.policy == "wfq":
-            return [s for t in self._tenants.values() for s in t.queue]
-        return [s for _d, _i, s in sorted(self._heap, key=lambda e: e[:2])]
+            queued: List[QuerySession] = list(self._ring)
+        elif self.policy == "wfq":
+            queued = [s for t in self._tenants.values() for s in t.queue]
+        else:
+            queued = [
+                s for _d, _i, s in sorted(self._heap, key=lambda e: e[:2])
+            ]
+        return list(self._checked_out) + queued
 
     def tenant_running(self, tenant) -> int:
         """Currently admitted (RUNNING) sessions of ``tenant`` — what the
@@ -188,10 +202,12 @@ class MorselScheduler:
                 ts = _TenantState(session.tenant, next(self._seq),
                                   self.weight(session.tenant))
                 self._tenants[session.tenant] = ts
-            if not ts.queue:
+            if session.tenant not in self._active:
                 # (re)activation: clamp to the floor so idling banks no
                 # credit — a returning tenant competes from "now", it does
-                # not get a monopolizing backlog of virtual time
+                # not get a monopolizing backlog of virtual time.  (A
+                # tenant whose sessions are all checked out to workers is
+                # still active — its queue is empty but it is not idle.)
                 floor = min(
                     (self._tenants[k].vtime for k in self._active),
                     default=self._vfloor,
@@ -204,57 +220,76 @@ class MorselScheduler:
             heapq.heappush(self._heap, (key, next(self._seq), session))
 
     # ------------------------------------------------------------------ #
-    # one scheduling decision
+    # one scheduling decision, split into checkout / checkin so a worker
+    # pool can run session.step() off the service lock: next_session()
+    # picks by policy, checkin() charges and requeues.  step() composes
+    # the two back-to-back — the serial semantics, bit-identical to the
+    # pre-pool per-policy step bodies.
     # ------------------------------------------------------------------ #
+    def next_session(self) -> Optional[QuerySession]:
+        """Pop the policy-chosen runnable session, marking it checked out
+        until :meth:`checkin`.  Returns None when nothing is queued —
+        which, under a pool, may mean every admitted session is currently
+        checked out on some worker (``running`` stays > 0)."""
+        if self.policy == "rr":
+            session = self._ring.popleft() if self._ring else None
+        elif self.policy == "wfq":
+            ready = [
+                self._tenants[k] for k in self._active
+                if self._tenants[k].queue
+            ]
+            if not ready:
+                session = None
+            else:
+                ts = min(ready, key=lambda t: (t.vtime, t.seq))
+                session = ts.queue.popleft()
+        else:  # deadline
+            if not self._heap:
+                session = None
+            else:
+                key, seq, session = heapq.heappop(self._heap)
+                # remember the EDF key: requeueing with the original
+                # (deadline, seq) keeps FIFO among equal deadlines stable
+                self._edf_keys[session.ticket] = (key, seq)
+        if session is not None:
+            self._checked_out.add(session)
+            self._out_by_tenant[session.tenant] += 1
+        return session
+
+    def checkin(self, session: QuerySession, finished: bool) -> float:
+        """Charge a stepped session's tenant and requeue it (or retire it
+        when finished).  Returns the charged cost."""
+        self._checked_out.discard(session)
+        self._out_by_tenant[session.tenant] -= 1
+        cost = self._charge(session, finished)
+        if self.policy == "rr":
+            if not finished:
+                self._ring.append(session)
+        elif self.policy == "wfq":
+            ts = self._tenants[session.tenant]
+            ts.vtime += cost / ts.weight
+            if finished:
+                if not ts.queue and not self._out_by_tenant[ts.key]:
+                    self._active.discard(ts.key)
+                    self._vfloor = max(self._vfloor, ts.vtime)
+            else:
+                ts.queue.append(session)
+        else:  # deadline
+            key, seq = self._edf_keys.pop(session.ticket)
+            if not finished:
+                heapq.heappush(self._heap, (key, seq, session))
+        return cost
+
     def step(self) -> Optional[QuerySession]:
         """Advance the policy-chosen session one morsel and charge its
         tenant.  Returns the session if it finished (done or failed) on
         this step, else None."""
-        if self.policy == "rr":
-            return self._step_rr()
-        if self.policy == "wfq":
-            return self._step_wfq()
-        return self._step_deadline()
-
-    def _step_rr(self) -> Optional[QuerySession]:
-        if not self._ring:
+        session = self.next_session()
+        if session is None:
             return None
-        session = self._ring.popleft()
         finished = session.step()
-        self._charge(session, finished)
-        if finished:
-            return session
-        self._ring.append(session)
-        return None
-
-    def _step_wfq(self) -> Optional[QuerySession]:
-        if not self._active:
-            return None
-        ts = min((self._tenants[k] for k in self._active),
-                 key=lambda t: (t.vtime, t.seq))
-        session = ts.queue.popleft()
-        finished = session.step()
-        cost = self._charge(session, finished)
-        ts.vtime += cost / ts.weight
-        if finished:
-            if not ts.queue:
-                self._active.discard(ts.key)
-                self._vfloor = max(self._vfloor, ts.vtime)
-            return session
-        ts.queue.append(session)
-        return None
-
-    def _step_deadline(self) -> Optional[QuerySession]:
-        if not self._heap:
-            return None
-        key, seq, session = heapq.heappop(self._heap)
-        finished = session.step()
-        self._charge(session, finished)
-        if finished:
-            return session
-        # original (deadline, seq): FIFO among equal deadlines is stable
-        heapq.heappush(self._heap, (key, seq, session))
-        return None
+        self.checkin(session, finished)
+        return session if finished else None
 
     def _charge(self, session: QuerySession, finished: bool) -> float:
         if self.cost_model == "unit":
@@ -285,7 +320,18 @@ class MorselScheduler:
         lands a failed QueryRecord instead of vanishing."""
         finished: List[QuerySession] = []
         while self._nrun:
+            if not self._has_queued():
+                # every remaining session is checked out to a worker —
+                # serial draining cannot touch them; the pool drains them
+                break
             done = self.step()
             if done is not None:
                 finished.append(done)
         return finished
+
+    def _has_queued(self) -> bool:
+        if self.policy == "rr":
+            return bool(self._ring)
+        if self.policy == "wfq":
+            return any(self._tenants[k].queue for k in self._active)
+        return bool(self._heap)

@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import threading
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional, Tuple
 
@@ -53,6 +54,7 @@ from repro.service.registry import TableRegistry
 from repro.service.result_cache import ResultCache
 from repro.service.scheduler import MorselScheduler
 from repro.service.session import DONE, FAILED, QUEUED, RUNNING, QuerySession
+from repro.service.workers import WorkerPool
 
 __all__ = ["QuipService"]
 
@@ -115,6 +117,7 @@ class QuipService:
         default_deadline: Optional[float] = None,
         tenant_quotas: Optional[Dict] = None,
         default_tenant_quota: Optional[int] = None,
+        workers: int = 0,
     ):
         assert max_inflight >= 1
         self.registry: TableRegistry = (
@@ -173,8 +176,21 @@ class QuipService:
         self._waiting: Deque[QuerySession] = deque()
         self._compounds: Dict[int, _Compound] = {}
         self._pending_compounds: set = set()  # unresolved tickets (step scan)
+        # one reentrant lock guards ALL shared serving state (scheduler
+        # queues, sessions, caches, telemetry); the condition signals
+        # workers on admission and callers on completion.  Serial mode
+        # (workers=0) takes the same lock — uncontended, and it keeps the
+        # registry's mutation hooks safe if a pool-mode service shares the
+        # registry with a serial one.
+        self._lock = threading.RLock()
+        self._cv = threading.Condition(self._lock)
+        self._pool: Optional[WorkerPool] = None
         self.registry.subscribe(self._on_mutation,
                                 before=self._check_mutation_safe)
+        if workers:
+            # workers >= 1: N threads pull morsel steps via the scheduler's
+            # checkout/checkin split; step() is disabled (it would race)
+            self._pool = WorkerPool(self, workers)
 
     # ------------------------------------------------------------------ #
     # per-query resources
@@ -215,21 +231,28 @@ class QuipService:
                 epochs)
 
     def _session_setup(self, query: Query, strategy: str):
-        """Materialize a session's resources — runs at admission, so a deep
-        waiting queue holds no table copies and the latency clock covers
-        planning the same way a cold serial run does."""
-        if strategy == "offline":
-            # the offline baseline never consults a plan — don't pay for
-            # (or skew the telemetry of) planning it
-            plan, hit = None, False
-        else:
-            plan, hit = self.plan_cache.get(query, self.tables)
-        tables = {t: self.tables[t].copy() for t in query.tables}
+        """Materialize a session's resources — at admission in serial mode,
+        at the first morsel step (on a worker, off the service lock) in
+        pool mode; either way a deep waiting queue holds no table copies
+        and the latency clock covers planning like a cold serial run."""
+        with self._lock:
+            if strategy == "offline":
+                # the offline baseline never consults a plan — don't pay for
+                # (or skew the telemetry of) planning it
+                plan, hit = None, False
+            else:
+                plan, hit = self.plan_cache.get(query, self.tables)
+            # snapshot references + epochs atomically: the registry is
+            # copy-on-write, so the heavy per-table copies can run off the
+            # lock on the snapshot objects (never mutated in place), while
+            # the result key still matches exactly what the copies observe.
+            # The key is computed here, not at submit: a mutation may land
+            # while the session waits in the admission queue.
+            snaps = {t: self.tables[t] for t in query.tables}
+            key = self._result_key(query, strategy)
+        tables = {t: rel.copy() for t, rel in snaps.items()}
         engine = self._make_engine(tables)
-        # the insertion key is computed here, not at submit: a mutation may
-        # land while the session waits in the admission queue, and the key
-        # must capture the epochs the execution actually observes
-        return plan, engine, tables, hit, self._result_key(query, strategy)
+        return plan, engine, tables, hit, key
 
     def submit(self, query: Query, *, strategy: Optional[str] = None,
                tenant: Optional[int] = None) -> int:
@@ -240,36 +263,47 @@ class QuipService:
         sessions are running and the tenant is under its quota, else the
         session waits (FIFO, quota-blocked sessions skipped in place)."""
         strategy = strategy or self.default_strategy
-        if self.result_cache is not None:
-            key = self._result_key(query, strategy)
-            cached = self.result_cache.get(key) if key is not None else None
-            if cached is not None:
-                session = QuerySession.from_cached(
-                    next(self._tickets), query, strategy, cached, tenant
-                )
-                self._sessions[session.ticket] = session
-                self._finalize(session)
-                return session.ticket
-        session = QuerySession(
-            ticket=next(self._tickets),
-            query=query,
-            strategy=strategy,
-            setup=lambda: self._session_setup(query, strategy),
-            tenant=tenant,
-            exec_kwargs=self._exec_kwargs,
-        )
-        self._sessions[session.ticket] = session
-        self._waiting.append(session)
-        self._admit()
-        if session.state == QUEUED:  # ring full or tenant quota exhausted
-            self.serving.admission_queued += 1
-        return session.ticket
+        with self._lock:
+            if self.result_cache is not None:
+                key = self._result_key(query, strategy)
+                cached = (self.result_cache.get(key)
+                          if key is not None else None)
+                if cached is not None:
+                    session = QuerySession.from_cached(
+                        next(self._tickets), query, strategy, cached, tenant
+                    )
+                    self._sessions[session.ticket] = session
+                    self._finalize(session)
+                    return session.ticket
+            session = QuerySession(
+                ticket=next(self._tickets),
+                query=query,
+                strategy=strategy,
+                setup=lambda: self._session_setup(query, strategy),
+                tenant=tenant,
+                exec_kwargs=self._exec_kwargs,
+            )
+            self._sessions[session.ticket] = session
+            self._waiting.append(session)
+            self._admit()
+            if session.state == QUEUED:  # ring full or quota exhausted
+                self.serving.admission_queued += 1
+            return session.ticket
 
     def poll(self, ticket: int) -> str:
         """State of a plain or compound ticket:
         queued | running | done | failed."""
+        with self._lock:
+            return self._poll_locked(ticket)
+
+    def _poll_locked(self, ticket: int) -> str:
         comp = self._compounds.get(ticket)
         if comp is not None:
+            if comp.result is None and ticket in self._pending_compounds:
+                # truthful polling: branches may all be finished already
+                # (result-cache hits, a step on another ticket) — combine
+                # now instead of reporting a phantom "running"
+                self._resolve_compounds()
             if comp.result is not None:
                 return DONE
             branches = [self._sessions[t].state for t in comp.tickets]
@@ -282,23 +316,42 @@ class QuipService:
 
     def step(self) -> bool:
         """One scheduler tick (one morsel of one session) plus any admission
-        and compound resolution it unlocks.  Returns True if work remains."""
-        finished = self.scheduler.step()
-        if finished is not None:
-            self._finalize(finished)
-        self._admit()
-        self._resolve_compounds()
-        return bool(self.scheduler.running or self._waiting)
+        and compound resolution it unlocks.  Returns True if work remains.
+
+        Inline stepping and a worker pool would race on the same scheduler
+        queues — with ``workers >= 1`` use ``run_until_idle``/``result``
+        (the pool drives progress) instead."""
+        if self._pool is not None:
+            raise RuntimeError(
+                "step() drives the scheduler inline and would race the "
+                "worker pool — use run_until_idle()/result(), or build "
+                "the service with workers=0"
+            )
+        with self._lock:
+            finished = self.scheduler.step()
+            if finished is not None:
+                self._finalize(finished)
+            self._admit()
+            self._resolve_compounds()
+            return bool(self.scheduler.running or self._waiting)
 
     def run_until_idle(self) -> None:
+        if self._pool is not None:
+            self._pool.wait_idle()
+            with self._lock:  # safety net — checkins resolve incrementally
+                self._resolve_compounds()
+            return
         while self.step():
             pass
 
     def result(self, ticket: int):
-        """Block (by driving the scheduler) until ``ticket`` finishes.
+        """Block until ``ticket`` finishes — by driving the scheduler
+        inline (serial mode) or by waiting on the workers (pool mode).
 
         Plain tickets return the :class:`ExecutionResult`; compound tickets
         return ``(answers, stats)`` (see ``submit_union`` etc.)."""
+        if self._pool is not None:
+            return self._threaded_result(ticket)
         if ticket in self._compounds:
             return self._compound_result(ticket)
         session = self._sessions[ticket]
@@ -309,6 +362,28 @@ class QuipService:
             raise session.error
         assert session.state == DONE, session.state
         return session.result
+
+    def _threaded_result(self, ticket: int):
+        """Pool-mode ``result``: wait on the condition until the workers
+        finish the ticket (or a branch fails / a worker crashes)."""
+        with self._cv:
+            comp = self._compounds.get(ticket)
+            if comp is not None:
+                while comp.result is None:
+                    for t in comp.tickets:  # tickets may grow (nested)
+                        if self._sessions[t].state == FAILED:
+                            raise self._sessions[t].error
+                    self._pool.check()
+                    self._cv.wait(0.05)
+                return comp.result
+            session = self._sessions[ticket]
+            while session.state in (QUEUED, RUNNING):
+                self._pool.check()
+                self._cv.wait(0.05)
+            if session.state == FAILED:
+                raise session.error
+            assert session.state == DONE, session.state
+            return session.result
 
     def answers(self, ticket: int) -> List[tuple]:
         """Answer tuples of a plain or compound ticket (drives the
@@ -334,15 +409,23 @@ class QuipService:
         ``failed``, and ``result`` raises the cancellation.  Already
         admitted sessions are untouched — drain them first
         (``run_until_idle``) for a clean shutdown, or after close() via
-        ``step``/``result``, which no longer admits anything new."""
-        self.registry.unsubscribe(self._on_mutation)
-        while self._waiting:
-            session = self._waiting.popleft()
-            session.cancel(RuntimeError(
-                f"service closed before ticket {session.ticket} was "
-                f"admitted"
-            ))
-            self._finalize(session)
+        ``step``/``result``, which no longer admits anything new.
+
+        With a worker pool, close() first stops and joins the workers
+        (in-flight steps complete and check in); the pool is detached, so
+        inline ``step``/``result`` work again on whatever remains."""
+        if self._pool is not None:
+            self._pool.shutdown()  # joins — must not hold the lock here
+            self._pool = None
+        with self._lock:
+            self.registry.unsubscribe(self._on_mutation)
+            while self._waiting:
+                session = self._waiting.popleft()
+                session.cancel(RuntimeError(
+                    f"service closed before ticket {session.ticket} was "
+                    f"admitted"
+                ))
+                self._finalize(session)
 
     def release(self, ticket: int) -> None:
         """Drop a finished ticket's retained result.
@@ -352,6 +435,10 @@ class QuipService:
         idempotent; a long-lived service under sustained traffic should
         release tickets once consumed.  Telemetry (``serving.records``)
         is unaffected.  Compound release also drops the branch sessions."""
+        with self._lock:
+            self._release_locked(ticket)
+
+    def _release_locked(self, ticket: int) -> None:
         comp = self._compounds.get(ticket)
         if comp is not None:
             branch_states = [self._sessions[t].state for t in comp.tickets]
@@ -390,52 +477,73 @@ class QuipService:
         """Outer query with ``in_attr IN (sub)``: the subquery session runs
         first (blocking subtree); the rewritten outer query is submitted the
         moment it completes."""
-        sub_ticket = self.submit(sub, strategy=strategy, tenant=tenant)
-        ticket = next(self._tickets)
-        self._compounds[ticket] = _Compound(
-            kind="nested", tickets=[sub_ticket], outer=outer, in_attr=in_attr,
-            strategy=strategy, tenant=tenant,
-        )
-        self._pending_compounds.add(ticket)
-        return ticket
+        with self._lock:
+            sub_ticket = self.submit(sub, strategy=strategy, tenant=tenant)
+            ticket = next(self._tickets)
+            self._compounds[ticket] = _Compound(
+                kind="nested", tickets=[sub_ticket], outer=outer,
+                in_attr=in_attr, strategy=strategy, tenant=tenant,
+            )
+            self._pending_compounds.add(ticket)
+            # the subquery may already be DONE (result-cache hit): resolve
+            # now so the outer query is submitted — and possibly combined —
+            # without waiting for an unrelated step() to notice
+            self._resolve_compounds()
+            return ticket
 
     def _submit_compound(self, kind: str, left: Query, right: Query, *,
                          strategy: Optional[str], tenant: Optional[int]) -> int:
-        lt = self.submit(left, strategy=strategy, tenant=tenant)
-        rt = self.submit(right, strategy=strategy, tenant=tenant)
-        ticket = next(self._tickets)
-        self._compounds[ticket] = _Compound(kind=kind, tickets=[lt, rt])
-        self._pending_compounds.add(ticket)
-        return ticket
+        with self._lock:
+            lt = self.submit(left, strategy=strategy, tenant=tenant)
+            rt = self.submit(right, strategy=strategy, tenant=tenant)
+            ticket = next(self._tickets)
+            self._compounds[ticket] = _Compound(kind=kind, tickets=[lt, rt])
+            self._pending_compounds.add(ticket)
+            # both branches may have completed at submit (result-cache
+            # hits): resolve immediately so poll() never reports "running"
+            # for a compound whose work is already done
+            self._resolve_compounds()
+            return ticket
 
     def _resolve_compounds(self) -> None:
-        for ticket in list(self._pending_compounds):
-            comp = self._compounds[ticket]
-            if comp.result is not None:
-                self._pending_compounds.discard(ticket)
-                continue
-            if any(self._sessions[t].state == FAILED for t in comp.tickets):
-                # never resolvable — stop rescanning it every step; the
-                # branch error surfaces via result()/poll()
-                self._pending_compounds.discard(ticket)
-                continue
-            if comp.kind == "nested" and comp.outer is not None:
-                sub = self._sessions[comp.tickets[0]]
-                if sub.state == DONE:
-                    outer2 = nested_outer_query(
-                        comp.outer, comp.in_attr, sub.result
-                    )
-                    comp.tickets.append(self.submit(
-                        outer2, strategy=comp.strategy, tenant=comp.tenant
-                    ))
-                    comp.outer = None  # outer submitted; await its session
-                continue
-            sessions = [self._sessions[t] for t in comp.tickets]
-            if comp.kind != "nested" and len(sessions) < 2:
-                continue
-            if all(s.state == DONE for s in sessions):
-                comp.result = self._combine(comp, sessions)
-                self._pending_compounds.discard(ticket)
+        # Fixpoint, not a single sweep: submitting a nested compound's outer
+        # query can itself complete via the result cache, which makes the
+        # compound combinable in the same call (the submit-time resolution
+        # the poll() contract depends on).
+        progress = True
+        while progress:
+            progress = False
+            for ticket in list(self._pending_compounds):
+                comp = self._compounds[ticket]
+                if comp.result is not None:
+                    self._pending_compounds.discard(ticket)
+                    continue
+                if any(self._sessions[t].state == FAILED
+                       for t in comp.tickets):
+                    # never resolvable — stop rescanning it every step; the
+                    # branch error surfaces via result()/poll()
+                    self._pending_compounds.discard(ticket)
+                    continue
+                if comp.kind == "nested" and comp.outer is not None:
+                    sub = self._sessions[comp.tickets[0]]
+                    if sub.state == DONE:
+                        outer2 = nested_outer_query(
+                            comp.outer, comp.in_attr, sub.result
+                        )
+                        comp.tickets.append(self.submit(
+                            outer2, strategy=comp.strategy,
+                            tenant=comp.tenant
+                        ))
+                        comp.outer = None  # outer submitted; await it
+                        progress = True
+                    continue
+                sessions = [self._sessions[t] for t in comp.tickets]
+                if comp.kind != "nested" and len(sessions) < 2:
+                    continue
+                if all(s.state == DONE for s in sessions):
+                    comp.result = self._combine(comp, sessions)
+                    self._pending_compounds.discard(ticket)
+                    progress = True
 
     def _combine(self, comp: _Compound, sessions: List[QuerySession]
                  ) -> Tuple[List[tuple], Dict]:
@@ -485,11 +593,33 @@ class QuipService:
                     >= quota):
                 quota_blocked.append(session)
                 continue
+            if self._pool is not None:
+                # planning + table copies run at the first morsel step on
+                # whichever worker claims the session (off this lock), and
+                # order-independent sibling morsels fan through the pool
+                session.defer_setup = True
+                session.task_runner = self._pool.map_morsels
             self.scheduler.add(session)
             if session.state == FAILED:
                 self._finalize(session)
         self._waiting.extendleft(reversed(quota_blocked))
         self.serving.observe_concurrency(self.scheduler.running)
+        if self._pool is not None:
+            self._cv.notify_all()  # wake idle workers for the new sessions
+
+    # ------------------------------------------------------------------ #
+    # worker-pool hooks (called by WorkerPool under the service lock)
+    # ------------------------------------------------------------------ #
+    def _checkout_session(self) -> Optional[QuerySession]:
+        return self.scheduler.next_session()
+
+    def _checkin_session(self, session: QuerySession, finished: bool) -> None:
+        self.scheduler.checkin(session, finished)
+        if finished:
+            self._finalize(session)
+        self._admit()
+        self._resolve_compounds()
+        self._cv.notify_all()  # wake result()/wait_idle() waiters
 
     def _finalize(self, session: QuerySession) -> None:
         if session.state == DONE:
@@ -521,8 +651,10 @@ class QuipService:
             failed=session.state == FAILED,
             steps=session.steps_taken,
             sched_cost=session.sched_cost,
-            admit_clock=session.admit_clock or 0.0,
-            finish_clock=session.finish_clock or 0.0,
+            # None survives: a never-admitted session (cancelled queue,
+            # setup failure) must not masquerade as "admitted at clock 0"
+            admit_clock=session.admit_clock,
+            finish_clock=session.finish_clock,
             deadline_met=session.deadline_met,
         ))
         # only the result (and its counters) outlives completion — the
@@ -551,8 +683,9 @@ class QuipService:
         point-in-time copies."""
         if self.store is None:
             return
-        busy = [s.ticket for s in self.scheduler.sessions()
-                if table in s.query.tables]
+        with self._lock:
+            busy = [s.ticket for s in self.scheduler.sessions()
+                    if table in s.query.tables]
         if busy:
             raise RuntimeError(
                 f"mutation of {table!r} while shared-impute sessions "
@@ -563,13 +696,15 @@ class QuipService:
     def _on_mutation(self, table: str) -> None:
         """Post-commit invalidation: the mutated table's epoch already
         advanced; evict every cache entry derived from its old contents."""
-        plans = self.plan_cache.invalidate_table(table)
-        results = (
-            self.result_cache.invalidate_table(table)
-            if self.result_cache is not None else 0
-        )
-        cells = self.store.invalidate(table) if self.store is not None else 0
-        self.serving.record_invalidation(plans, results, cells)
+        with self._lock:
+            plans = self.plan_cache.invalidate_table(table)
+            results = (
+                self.result_cache.invalidate_table(table)
+                if self.result_cache is not None else 0
+            )
+            cells = (self.store.invalidate(table)
+                     if self.store is not None else 0)
+            self.serving.record_invalidation(plans, results, cells)
 
     # ------------------------------------------------------------------ #
     # telemetry
@@ -577,6 +712,10 @@ class QuipService:
     def summary(self) -> Dict[str, float]:
         """Flat ``serving_*``-ready metrics: scheduling, plan cache, result
         cache, invalidation, and cross-query imputation sharing."""
+        with self._lock:
+            return self._summary_locked()
+
+    def _summary_locked(self) -> Dict[str, float]:
         out = self.serving.summary()
         out.update({
             f"plan_cache_{k}": v for k, v in self.plan_cache.stats().items()
@@ -599,4 +738,5 @@ class QuipService:
         latency, queue wait, morsel steps, charged cost + cost share,
         p95 turnaround on the scheduler clock, deadline hit-rate
         (see :meth:`ServingStats.tenant_summary`)."""
-        return self.serving.tenant_summary()
+        with self._lock:
+            return self.serving.tenant_summary()

@@ -63,6 +63,12 @@ class QuerySession:
         self.tables: Optional[Dict[str, MaskedRelation]] = None
         self.plan_cache_hit = False
         self.result_cache_hit = False
+        # worker-pool mode: materialize resources at the *first step*
+        # (off the admission lock) instead of inside start(), and fan
+        # intra-query sibling morsels through this runner (see
+        # service/workers.py); both are set by QuipService._admit
+        self.defer_setup = False
+        self.task_runner = None
         # set at admission: where a DONE result may be inserted in the
         # ResultCache (captures the table epochs the execution observed)
         self.result_key: Optional[Tuple] = None
@@ -118,10 +124,20 @@ class QuerySession:
         return session
 
     def start(self) -> None:
-        """Admission: materialize resources, build the step coroutine."""
+        """Admission: materialize resources, build the step coroutine.
+
+        With ``defer_setup`` (worker-pool mode) admission only flips the
+        state — planning and table copies run inside the first ``step()``
+        on whichever worker picks the session up, so they never serialize
+        under the service lock; a setup failure then surfaces exactly like
+        a first-morsel failure (FAILED, finalized by the pool)."""
         assert self.state == QUEUED, self.state
         self.started_at = time.perf_counter()
         self.state = RUNNING
+        if not self.defer_setup:
+            self._materialize()
+
+    def _materialize(self) -> None:
         try:
             (self.plan, self.engine, self.tables,
              self.plan_cache_hit, self.result_key) = self._setup()
@@ -136,6 +152,7 @@ class QuerySession:
                     strategy=self.strategy,
                     **self.exec_kwargs,
                 )
+                executor.task_runner = self.task_runner
                 self._executor = executor
                 self._gen = executor.steps()
         except Exception as e:  # plan/setup errors surface via result()
@@ -155,6 +172,10 @@ class QuerySession:
         ρ-fixpoint morsel 50× a 1 ms scan morsel instead of one ticket."""
         if self.state != RUNNING:
             return True
+        if self._gen is None:  # deferred setup: first step materializes
+            self._materialize()
+            if self.state != RUNNING:
+                return True
         sim0 = self.engine.simulated_seconds if self.engine is not None else 0.0
         t0 = time.perf_counter()
         try:

@@ -1,0 +1,409 @@
+"""Worker-pool serving tests + the serving-layer bugfix sweep.
+
+Tentpole: ``QuipService(workers=N)`` runs N threads pulling morsel steps
+through the scheduler's checkout/checkin split.  The invariant under
+test is the same as the serial serving fuzzer's — every answer is
+**bit-identical to a cold serial replay** on the admission snapshot —
+now under real threads, for every scheduler policy × sharing mode, with
+intra-query sibling-morsel fan-out in the mix.
+
+Also here: regression tests for the bugfixes that rode along in this
+change (compound tickets polling ``running`` forever after result-cache
+hits, ``TableRegistry._commit`` skipping later after-hooks when one
+raises, ``LruCache`` capacity validation vanishing under ``python -O``,
+and never-admitted sessions masquerading as ``admit_clock=0``).
+
+Threaded tests carry ``@pytest.mark.timeout`` so a pool deadlock fails
+fast instead of hanging the suite (see conftest for the SIGALRM
+fallback when pytest-timeout is not installed).
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import Counter
+
+import numpy as np
+import pytest
+
+from repro.core.stats import QueryRecord, ServingStats
+from repro.service import QuipService, TableRegistry
+from repro.service.lru import LruCache
+from test_quip_correctness import GroundTruthImputer, _build_instance
+from test_serving_fuzz import MORSEL_ROWS, _rand_mutation, _rand_query, _replay
+
+STRATEGIES = ("offline", "eager", "lazy", "adaptive")
+
+
+def _instance(seed: int, rows: int = 48):
+    tables, _clean, truth = _build_instance(
+        np.random.default_rng(seed), 2, rows, 0.3, 6
+    )
+    return tables, truth
+
+
+def _service(tables, truth, **kw):
+    kw.setdefault("morsel_rows", MORSEL_ROWS)
+    kw.setdefault("cost_model", "unit")
+    return QuipService(
+        {t: r.copy() for t, r in tables.items()},
+        lambda: GroundTruthImputer(truth),
+        **kw,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# tentpole: pool answers == serial answers, every policy × sharing mode
+# --------------------------------------------------------------------------- #
+@pytest.mark.timeout(120)
+@pytest.mark.parametrize("policy", ["rr", "wfq", "deadline"])
+@pytest.mark.parametrize("shared", [False, True])
+def test_pool_matches_serial(policy, shared):
+    tables, truth = _instance(11)
+    rng = np.random.default_rng(42)
+    cases = [
+        (_rand_query(rng), STRATEGIES[int(rng.integers(0, 4))])
+        for _ in range(10)
+    ]
+
+    serial = _service(tables, truth, result_cache_size=0)
+    want = []
+    for query, strategy in cases:
+        want.append(Counter(serial.answers(
+            serial.submit(query, strategy=strategy)
+        )))
+    serial.close()
+
+    svc = _service(tables, truth, result_cache_size=0, workers=3,
+                   scheduler_policy=policy, shared_impute=shared,
+                   tenant_weights={0: 2.0}, tenant_deadlines={1: 64.0})
+    tickets = [
+        svc.submit(query, strategy=strategy, tenant=i % 3)
+        for i, (query, strategy) in enumerate(cases)
+    ]
+    svc.run_until_idle()
+    for ticket, reference in zip(tickets, want):
+        assert svc.poll(ticket) == "done"
+        assert Counter(svc.answers(ticket)) == reference
+    assert svc.summary()["failed"] == 0
+    svc.close()
+
+
+@pytest.mark.timeout(120)
+def test_pool_scales_from_one_worker():
+    """workers=1 is a degenerate-but-valid pool: same answers, and the
+    intra-query runner falls back to inline execution (size <= 1)."""
+    tables, truth = _instance(5)
+    rng = np.random.default_rng(7)
+    cases = [(_rand_query(rng), "lazy") for _ in range(6)]
+    reference = []
+    serial = _service(tables, truth, result_cache_size=0)
+    for query, strategy in cases:
+        reference.append(
+            Counter(serial.answers(serial.submit(query, strategy=strategy)))
+        )
+    serial.close()
+    for workers in (1, 2, 4):
+        svc = _service(tables, truth, result_cache_size=0, workers=workers)
+        tickets = [svc.submit(q, strategy=s) for q, s in cases]
+        svc.run_until_idle()
+        got = [Counter(svc.answers(t)) for t in tickets]
+        assert got == reference, f"workers={workers} diverged"
+        svc.close()
+
+
+@pytest.mark.timeout(120)
+def test_pool_result_blocks_and_caches():
+    """Pool-mode result() waits on the workers; a repeated signature on
+    unmutated tables is a result-cache hit even across threads."""
+    tables, truth = _instance(3)
+    rng = np.random.default_rng(1)
+    query = _rand_query(rng)
+    svc = _service(tables, truth, workers=2, result_cache_size=8)
+    t1 = svc.submit(query, strategy="lazy")
+    first = Counter(svc.result(t1).answer_tuples())
+    t2 = svc.submit(query, strategy="lazy")
+    assert Counter(svc.result(t2).answer_tuples()) == first
+    svc.run_until_idle()
+    hits = [r.result_cache_hit for r in svc.serving.records]
+    assert hits.count(True) >= 1
+    svc.close()
+
+
+@pytest.mark.timeout(120)
+def test_pool_compounds_and_failures():
+    """Compounds resolve under the pool, and a failing branch surfaces
+    through result() without wedging the workers."""
+    tables, truth = _instance(9)
+    rng = np.random.default_rng(2)
+    left, right = _rand_query(rng), _rand_query(rng)
+    serial = _service(tables, truth, result_cache_size=0)
+    want, _stats = serial.result(serial.submit_union(left, right))
+    serial.close()
+
+    svc = _service(tables, truth, workers=2, result_cache_size=0)
+    ticket = svc.submit_union(left, right)
+    answers, _stats = svc.result(ticket)
+    assert Counter(answers) == Counter(want)
+
+    from repro.core.plan import Query
+    bad = Query(("NoSuchTable",), (), (), ("NoSuchTable.v",))
+    bad_ticket = svc.submit(bad)
+    with pytest.raises(KeyError):
+        svc.result(bad_ticket)
+    assert svc.poll(bad_ticket) == "failed"
+    # the pool survives the failure and keeps serving
+    again = svc.submit(left, strategy="lazy")
+    svc.result(again)
+    svc.run_until_idle()
+    svc.close()
+
+
+@pytest.mark.timeout(60)
+def test_pool_disables_inline_step():
+    tables, truth = _instance(4)
+    svc = _service(tables, truth, workers=2)
+    ticket = svc.submit(_rand_query(np.random.default_rng(0)))
+    with pytest.raises(RuntimeError, match="worker pool"):
+        svc.step()
+    svc.run_until_idle()
+    assert svc.poll(ticket) == "done"
+    svc.close()
+    # close() detaches the pool: inline stepping is legal again
+    assert svc.step() is False
+
+
+# --------------------------------------------------------------------------- #
+# tentpole: threaded serving fuzzer — concurrent submit/poll/result under
+# real threads, mutations between quiesced rounds, replay-verified answers
+# --------------------------------------------------------------------------- #
+def _threaded_fuzz(seed: int, policy: str, shared: bool, *, workers: int,
+                   rounds: int, submitters: int, per_thread: int,
+                   rows: int = 48, mutations: bool = True) -> None:
+    ctx = (f"[threaded-fuzz] seed={seed} policy={policy} shared={shared} "
+           f"workers={workers} rounds={rounds} submitters={submitters} "
+           f"per_thread={per_thread} mutations={mutations}")
+    print(ctx)  # reproducibility: shown on failure
+    tables, _clean, truth = _build_instance(
+        np.random.default_rng(seed + 1000), 2, rows, 0.3, 6
+    )
+    reg = TableRegistry({t: r.copy() for t, r in tables.items()})
+    factory = lambda: GroundTruthImputer(truth)  # noqa: E731
+    svc = QuipService(
+        reg, factory, shared_impute=shared, max_inflight=3,
+        morsel_rows=MORSEL_ROWS, scheduler_policy=policy, cost_model="unit",
+        tenant_weights={0: 2.0}, tenant_deadlines={1: 64.0},
+        tenant_quotas={2: 1}, result_cache_size=8, workers=workers,
+    )
+    submitted = []  # (ticket, query, strategy, round snapshot)
+    mut_rng = np.random.default_rng(seed + 2000)
+
+    for rnd in range(rounds):
+        # mutations only land on a quiesced service (the shared store's
+        # veto requires it), so the round snapshot is the exact admission
+        # state for every query submitted this round
+        snapshot = {t: reg[t].copy() for t in reg}
+        collected = [None] * submitters
+        stop_polling = threading.Event()
+
+        def submit_some(slot: int) -> None:
+            rng = np.random.default_rng(seed + 10_000 * (rnd + 1) + slot)
+            mine = []
+            for _ in range(per_thread):
+                query = _rand_query(rng)
+                strategy = STRATEGIES[int(rng.integers(0, len(STRATEGIES)))]
+                ticket = svc.submit(query, strategy=strategy,
+                                    tenant=int(rng.integers(0, 3)))
+                mine.append((ticket, query, strategy))
+            collected[slot] = mine
+
+        def poll_some() -> None:
+            rng = np.random.default_rng(seed + 77)
+            while not stop_polling.is_set():
+                if submitted:
+                    t = submitted[int(rng.integers(0, len(submitted)))][0]
+                    assert svc.poll(t) in {
+                        "queued", "running", "done", "failed"
+                    }, ctx
+
+        threads = [
+            threading.Thread(target=submit_some, args=(slot,), daemon=True)
+            for slot in range(submitters)
+        ]
+        threads.append(threading.Thread(target=poll_some, daemon=True))
+        for t in threads:
+            t.start()
+        for t in threads[:-1]:
+            t.join(timeout=60)
+            assert not t.is_alive(), f"{ctx} submitter wedged"
+        stop_polling.set()
+        threads[-1].join(timeout=60)
+        assert not threads[-1].is_alive(), f"{ctx} poller wedged"
+        for mine in collected:
+            assert mine is not None, f"{ctx} submitter died"
+            submitted.extend(
+                (ticket, query, strategy, snapshot)
+                for ticket, query, strategy in mine
+            )
+        svc.run_until_idle()
+        if mutations:
+            _rand_mutation(mut_rng, reg)
+
+    svc.run_until_idle()
+    summary = svc.summary()
+    assert summary["queries"] == len(submitted), ctx
+    assert summary["failed"] == 0, ctx
+    for ticket, query, strategy, snapshot in submitted:
+        assert svc.poll(ticket) == "done", f"{ctx} ticket {ticket} not done"
+        got = Counter(svc.answers(ticket))
+        want = Counter(
+            _replay(query, strategy, snapshot, factory).answer_tuples()
+        )
+        assert got == want, (
+            f"{ctx} ticket {ticket} strategy={strategy} diverged from "
+            f"cold serial replay"
+        )
+    svc.close()
+
+
+@pytest.mark.timeout(300)
+@pytest.mark.parametrize("seed,policy,shared", [
+    (0, "rr", False),
+    (1, "wfq", True),
+])
+def test_threaded_fuzz_fast(seed, policy, shared):
+    _threaded_fuzz(seed, policy, shared, workers=3, rounds=2,
+                   submitters=3, per_thread=4)
+
+
+@pytest.mark.slow
+@pytest.mark.timeout(600)
+@pytest.mark.parametrize("seed", range(2, 6))
+@pytest.mark.parametrize("policy", ["rr", "wfq", "deadline"])
+@pytest.mark.parametrize("shared", [False, True])
+def test_threaded_fuzz_deep(seed, policy, shared):
+    _threaded_fuzz(seed, policy, shared, workers=4, rounds=3,
+                   submitters=4, per_thread=5, rows=56)
+
+
+# --------------------------------------------------------------------------- #
+# bugfix sweep regressions
+# --------------------------------------------------------------------------- #
+def test_compound_poll_truthful_on_cache_hits():
+    """A compound whose branches all hit the result cache must poll
+    ``done`` immediately — previously it reported ``running`` forever
+    because resolution only happened inside step()."""
+    tables, truth = _instance(6)
+    rng = np.random.default_rng(3)
+    left, right = _rand_query(rng), _rand_query(rng)
+    svc = _service(tables, truth, result_cache_size=16)
+    # warm the cache
+    svc.result(svc.submit(left, strategy="lazy"))
+    svc.result(svc.submit(right, strategy="lazy"))
+    ticket = svc.submit_union(left, right, strategy="lazy")
+    assert svc.poll(ticket) == "done"  # no step() in between
+    answers, _stats = svc.result(ticket)
+    assert Counter(answers) == Counter(
+        svc.result(svc.submit_union(left, right, strategy="lazy"))[0]
+    )
+    svc.close()
+
+
+def test_nested_compound_resolves_at_submit_via_cache():
+    tables, truth = _instance(6)
+    rng = np.random.default_rng(8)
+    outer, sub = _rand_query(rng), _rand_query(rng)
+    svc = _service(tables, truth, result_cache_size=16)
+    first = svc.submit_nested(outer, f"{outer.tables[0]}.v", sub,
+                              strategy="lazy")
+    want, _stats = svc.result(first)
+    # sub AND the rewritten outer are now cached: submit-time resolution
+    # must land the repeat compound DONE with zero scheduler steps
+    again = svc.submit_nested(outer, f"{outer.tables[0]}.v", sub,
+                              strategy="lazy")
+    assert svc.poll(again) == "done"
+    assert Counter(svc.result(again)[0]) == Counter(want)
+    svc.close()
+
+
+def test_registry_commit_runs_all_after_hooks():
+    """One raising after-hook must not starve later subscribers — the
+    epoch has advanced, so every cache must still observe the mutation."""
+    tables, truth = _instance(2)
+    reg = TableRegistry({t: r.copy() for t, r in tables.items()})
+    seen = []
+
+    def bad(table):
+        seen.append(("bad", table))
+        raise ValueError("subscriber exploded")
+
+    def good(table):
+        seen.append(("good", table))
+
+    reg.subscribe(bad)
+    reg.subscribe(good)
+    before = reg.epoch("R0")
+    with pytest.raises(ValueError, match="subscriber exploded"):
+        reg.update_rows("R0", np.array([0]), {"R0.v": np.array([1])})
+    assert ("good", "R0") in seen, "later subscriber was skipped"
+    assert reg.epoch("R0") == before + 1
+
+
+def test_registry_commit_aggregates_multiple_hook_errors():
+    tables, truth = _instance(2)
+    reg = TableRegistry({t: r.copy() for t, r in tables.items()})
+    reg.subscribe(lambda t: (_ for _ in ()).throw(ValueError("first")))
+    reg.subscribe(lambda t: (_ for _ in ()).throw(KeyError("second")))
+    with pytest.raises(RuntimeError, match="2 post-commit subscribers"):
+        reg.update_rows("R0", np.array([0]), {"R0.v": np.array([1])})
+    try:
+        reg.update_rows("R0", np.array([0]), {"R0.v": np.array([1])})
+    except RuntimeError as e:
+        assert isinstance(e.__cause__, ValueError)  # first error chained
+
+
+def test_lru_capacity_validation_survives_optimized_mode():
+    """`assert` would vanish under ``python -O``; the ValueError must not."""
+    with pytest.raises(ValueError, match="capacity"):
+        LruCache(-1)
+    # capacity 0 uniformly disables: inserts are dropped, lookups miss
+    cache = LruCache(0)
+    cache.insert("k", "v")
+    assert cache.lookup("k") is None
+
+
+def test_unadmitted_sessions_excluded_from_turnaround():
+    """A session cancelled before admission must record
+    ``admit_clock=None`` (not clock-0) and stay out of the turnaround
+    quantiles."""
+    tables, truth = _instance(2)
+    rng = np.random.default_rng(4)
+    svc = _service(tables, truth, max_inflight=1, result_cache_size=0)
+    ran = svc.submit(_rand_query(rng), tenant=0)
+    queued = svc.submit(_rand_query(rng), tenant=0)  # blocked behind ran
+    svc.result(ran)
+    # re-fill the single slot so the next close() cancels something
+    svc.submit(_rand_query(rng), tenant=0)
+    stuck = svc.submit(_rand_query(rng), tenant=0)
+    assert svc.poll(stuck) == "queued"
+    svc.close()
+    by_ticket = {r.ticket: r for r in svc.serving.records}
+    assert by_ticket[stuck].failed
+    assert by_ticket[stuck].admit_clock is None
+    assert by_ticket[stuck].finish_clock is None
+    assert by_ticket[stuck].turnaround_cost is None
+    assert by_ticket[ran].turnaround_cost is not None
+    # quantiles come only from admitted-and-stepped sessions — the record
+    # with admit_clock=None must not drag p95 toward zero or crash
+    summary = svc.tenant_summary()
+    assert 0 in summary
+    _ = queued  # admitted once `ran` finished; just part of the traffic
+
+
+def test_query_record_turnaround_none_semantics():
+    rec = QueryRecord(ticket=1, tenant=None, strategy="lazy",
+                      queue_wait_s=0.0, latency_s=0.0, plan_cache_hit=False,
+                      counters=None, admit_clock=None, finish_clock=None)
+    assert rec.turnaround_cost is None
+    stats = ServingStats()
+    assert stats is not None
