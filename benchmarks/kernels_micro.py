@@ -12,7 +12,13 @@ correctness tool, not a perf path).
 The neighbour-aggregation and knn-impute cases track the imputation
 trajectory (paper Fig. 2: KNN inference dominates): the vectorized
 bincount-argmax mode vs the seed per-row Python loop, and the end-to-end
-``KnnImputer.impute_attr`` batch cost on synthetic masked tables."""
+``KnnImputer.impute_attr`` batch cost on synthetic masked tables.
+
+The segment-reduce cases cover the compiled executor's grouped-aggregate
+lowering (docs/compiled.md): per-group Python loop vs the numpy
+sort-and-slice path (the bit-identical serving default) vs the jitted
+``jax.ops`` ref path, with the Pallas kernel verified at the smallest
+shape."""
 
 from __future__ import annotations
 
@@ -173,6 +179,47 @@ def run(fast: bool = True) -> List[Dict]:
                                         impl="pallas"), exp))
         rows.append(row)
 
+    # segment reductions (compiled grouped aggregates — docs/compiled.md)
+    def _seg_loop(vals, seg, s, op):
+        red = {"sum": np.sum, "min": np.min, "max": np.max}[op]
+        ident = {"sum": 0, "min": np.iinfo(np.int64).max,
+                 "max": np.iinfo(np.int64).min}[op]
+        return np.asarray([
+            red(vals[seg == i]) if (seg == i).any() else ident
+            for i in range(s)
+        ], dtype=np.int64)
+
+    seg_shapes = [(1 << 14, 64), (1 << 16, 1024)] if fast else [
+        (1 << 14, 64), (1 << 18, 1024), (1 << 20, 8192),
+    ]
+    for n, s in seg_shapes:
+        seg = rng.integers(0, s, size=n).astype(np.int64)
+        vals = rng.integers(-1000, 1000, size=n).astype(np.int64)
+        for op in ("count", "sum", "max"):
+            us_np = _time(
+                lambda: kops.segment_reduce(vals, seg, s, op, impl="numpy")
+            )
+            us_ref = _time(
+                lambda: kops.segment_reduce(vals, seg, s, op, impl="ref")
+            )
+            got_np = kops.segment_reduce(vals, seg, s, op, impl="numpy")
+            got_ref = kops.segment_reduce(vals, seg, s, op, impl="ref")
+            exp = _seg_loop(vals, seg, s, op) if op != "count" else \
+                np.bincount(seg, minlength=s)
+            row = {
+                "kernel": "segment_reduce", "op": op, "n": n, "segments": s,
+                "us_per_call_numpy": round(us_np, 1),
+                "us_per_call_ref": round(us_ref, 1),
+                "numpy_matches_loop": bool(np.array_equal(got_np, exp)),
+                "ref_matches_numpy": bool(np.array_equal(got_ref, got_np)),
+            }
+            if (n, s) == seg_shapes[0]:
+                got_pl = kops.segment_reduce(vals, seg, s, op, impl="pallas")
+                row["pallas_matches_numpy"] = bool(
+                    np.array_equal(got_pl, got_np)
+                )
+            rows.append(row)
+
     # end-to-end KNN impute batch (fit + one impute_attr flush)
     knn_shapes = [(2000, 8, 512)] if fast else [(2000, 8, 512), (20000, 16, 4096)]
     for n, d, batch in knn_shapes:
@@ -240,4 +287,17 @@ def derived(rows: List[Dict]) -> Dict[str, float]:
         ),
         "knn_impute_int_us_per_value": knn_int[-1]["us_per_value"],
         "knn_impute_float_us_per_value": knn_flt[-1]["us_per_value"],
+        "segment_ok": float(
+            all(
+                r["numpy_matches_loop"] and r["ref_matches_numpy"]
+                and r.get("pallas_matches_numpy", True)
+                for r in by("segment_reduce")
+            )
+        ),
+        "segment_numpy_us_max": max(
+            r["us_per_call_numpy"] for r in by("segment_reduce")
+        ),
+        "segment_ref_us_max": max(
+            r["us_per_call_ref"] for r in by("segment_reduce")
+        ),
     }

@@ -25,6 +25,7 @@ from benchmarks import (
     exp9_result_cache,
     exp10_qos,
     exp11_workers,
+    exp12_compiled,
     kernels_micro,
 )
 
@@ -40,6 +41,7 @@ MODULES = [
     exp9_result_cache,
     exp10_qos,
     exp11_workers,
+    exp12_compiled,
     kernels_micro,
 ]
 

@@ -6,13 +6,22 @@ raw string ad hoc — ``resolve_shared_impute`` accepted only the literal
 ``"1"``, so ``QUIP_SHARED_IMPUTE=true`` silently left sharing *off*.
 :func:`env_flag` is the one shared parser: the usual truthy/falsy spellings
 work, anything else fails loud instead of silently picking a default.
+
+:func:`env_choice` is the enumerated-value twin for the implementation
+dispatch vars (``QUIP_JOIN_IMPL``, ``QUIP_KNN_IMPL``, ``QUIP_EXEC_IMPL``,
+``QUIP_SEGMENT_IMPL``): each call site used to hand-parse
+``impl or os.environ.get(...) or default`` and a typo'd value raised only
+*after* silently skipping the env var's precedence rules; now garbage
+fails loud with the variable name and the accepted spellings, exactly
+like ``env_flag``.
 """
 
 from __future__ import annotations
 
 import os
+from typing import Sequence
 
-__all__ = ["env_flag"]
+__all__ = ["env_flag", "env_choice"]
 
 _TRUE = frozenset({"1", "true", "yes", "on"})
 _FALSE = frozenset({"0", "false", "no", "off"})
@@ -35,4 +44,21 @@ def env_flag(name: str, default: bool) -> bool:
     raise ValueError(
         f"{name}={raw!r} is not a boolean flag "
         f"(expected one of {sorted(_TRUE)} or {sorted(_FALSE)})"
+    )
+
+
+def env_choice(name: str, choices: Sequence[str], default: str) -> str:
+    """Enumerated env var ``name``: one of ``choices`` (any case).
+
+    Unset (or empty) returns ``default``; any other value raises
+    ``ValueError`` — a typo'd impl name must not silently pick a default.
+    """
+    raw = os.environ.get(name)
+    if raw is None or raw.strip() == "":
+        return default
+    value = raw.strip().lower()
+    if value in choices:
+        return value
+    raise ValueError(
+        f"{name}={raw!r} is not a valid choice (expected one of {sorted(choices)})"
     )

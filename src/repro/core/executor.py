@@ -1027,9 +1027,31 @@ def execute_quip(
     join_impl: Optional[str] = None,
     minmax_opt: bool = True,
     use_vf: bool = True,
+    exec_impl: Optional[str] = None,
 ) -> ExecutionResult:
     if plan is None:
         plan = make_plan(query, tables, planner=planner)
+    # compiled dispatch (QUIP_EXEC_IMPL mirrors QUIP_JOIN_IMPL): lower the
+    # plan to a whole-relation tensor program when provably answer-identical,
+    # else count the fallback and run the interpreter below
+    from repro.core.compiled import (
+        CompileFallback,
+        compile_plan,
+        resolve_exec_impl,
+    )
+
+    if resolve_exec_impl(exec_impl) == "compiled":
+        try:
+            compiled = compile_plan(
+                query, plan, tables, strategy,
+                use_vf=use_vf, minmax_opt=minmax_opt, join_impl=join_impl,
+            )
+        except CompileFallback:
+            engine.counters.compile_fallbacks += 1
+        else:
+            return compiled.run(
+                {t: tables[t].copy() for t in query.tables}, engine
+            )
     ex = QuipExecutor(
         query,
         {t: tables[t].copy() for t in query.tables},

@@ -146,21 +146,27 @@ class ExecutionCounters:
     trigger_joins: int = 0
     wall_seconds: float = 0.0
     join_impl: str = "numpy"  # resolved join-core dispatch (see triggers)
+    exec_impl: str = "interp"  # which executor answered (see core/compiled.py)
+    compiled_hits: int = 0  # executions served by a compiled plan
+    compile_fallbacks: int = 0  # compiled requested but interpreter ran
 
     def as_dict(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
 
     def merged(self, other: "ExecutionCounters") -> "ExecutionCounters":
         """Element-wise sum of all numeric counters (compound queries and
-        serving aggregation); ``join_impl`` is kept when both branches agree
-        and reported as ``"mixed"`` otherwise."""
+        serving aggregation); ``join_impl``/``exec_impl`` are kept when both
+        branches agree and reported as ``"mixed"`` otherwise."""
         out = ExecutionCounters()
         for f in dataclasses.fields(self):
-            if f.name == "join_impl":
+            if f.name in ("join_impl", "exec_impl"):
                 continue
             setattr(out, f.name, getattr(self, f.name) + getattr(other, f.name))
         out.join_impl = (
             self.join_impl if self.join_impl == other.join_impl else "mixed"
+        )
+        out.exec_impl = (
+            self.exec_impl if self.exec_impl == other.exec_impl else "mixed"
         )
         return out
 
@@ -333,4 +339,6 @@ class ServingStats:
             "imputations": total.imputations,
             "impute_batches": total.impute_batches,
             "impute_cross_hits": total.impute_cross_hits,
+            "compiled_hits": total.compiled_hits,
+            "compile_fallbacks": total.compile_fallbacks,
         }

@@ -14,12 +14,12 @@ on verify failure) so that late resolutions observe them — this is what makes
 from __future__ import annotations
 
 import dataclasses
-import os
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.bloom import BloomFilter
+from repro.core.env import env_choice
 from repro.core.relation import MaskedRelation, concat_relations
 from repro.core.schema import table_of
 from repro.kernels import ops as kops
@@ -27,14 +27,18 @@ from repro.kernels import ops as kops
 __all__ = ["JoinState", "multi_match", "resolve_join_impl"]
 
 
+_JOIN_IMPLS = ("numpy", "ref", "pallas")
+
+
 def resolve_join_impl(impl: Optional[str] = None) -> str:
     """Join-core dispatch: explicit ``impl`` > ``QUIP_JOIN_IMPL`` env >
     ``"numpy"`` (the sort-join oracle).  ``"ref"`` / ``"pallas"`` route
     through the kernel layer (``kernels.ops.hash_join_match``)."""
-    impl = impl or os.environ.get("QUIP_JOIN_IMPL") or "numpy"
-    if impl not in ("numpy", "ref", "pallas"):
-        raise ValueError(f"unknown join impl {impl!r}")
-    return impl
+    if impl is not None:
+        if impl not in _JOIN_IMPLS:
+            raise ValueError(f"unknown join impl {impl!r}")
+        return impl
+    return env_choice("QUIP_JOIN_IMPL", _JOIN_IMPLS, "numpy")
 
 
 def multi_match(build_keys: np.ndarray, probe_keys: np.ndarray,

@@ -11,7 +11,6 @@ Pallas is a correctness tool, not a performance path).
 
 from __future__ import annotations
 
-import os
 from typing import Optional, Tuple
 
 import numpy as np
@@ -19,6 +18,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.env import env_choice
 from repro.kernels import ref as _ref
 from repro.kernels.bloom_probe import bloom_probe_pallas
 from repro.kernels.hash_join import (
@@ -29,6 +29,7 @@ from repro.kernels.hash_join import (
 from repro.kernels.hashing import fold64
 from repro.kernels.knn_distance import masked_distance_pallas
 from repro.kernels.neighbor_agg import neighbor_mean_pallas, neighbor_mode_pallas
+from repro.kernels.segment_ops import segment_reduce_pallas
 
 __all__ = [
     "bloom_probe",
@@ -36,8 +37,10 @@ __all__ = [
     "masked_distance",
     "masked_knn",
     "neighbor_aggregate",
+    "segment_reduce",
     "default_impl",
     "resolve_knn_impl",
+    "resolve_segment_impl",
 ]
 
 
@@ -180,14 +183,134 @@ def masked_knn(
     return -neg, idx
 
 
+_HOST_IMPLS = ("numpy", "ref", "pallas")
+
+
 def resolve_knn_impl(impl: Optional[str] = None) -> str:
     """KNN-aggregation dispatch: explicit ``impl`` > ``QUIP_KNN_IMPL`` env >
     ``"numpy"`` (the vectorized host oracle, bit-identical to the seed
     per-row loop)."""
-    impl = impl or os.environ.get("QUIP_KNN_IMPL") or "numpy"
-    if impl not in ("numpy", "ref", "pallas"):
-        raise ValueError(f"unknown knn impl {impl!r}")
-    return impl
+    if impl is not None:
+        if impl not in _HOST_IMPLS:
+            raise ValueError(f"unknown knn impl {impl!r}")
+        return impl
+    return env_choice("QUIP_KNN_IMPL", _HOST_IMPLS, "numpy")
+
+
+def resolve_segment_impl(impl: Optional[str] = None) -> str:
+    """Segment-reduction dispatch: explicit ``impl`` > ``QUIP_SEGMENT_IMPL``
+    env > ``"numpy"`` (the per-segment host oracle, bit-identical to the
+    interpreter's per-group reductions)."""
+    if impl is not None:
+        if impl not in _HOST_IMPLS:
+            raise ValueError(f"unknown segment impl {impl!r}")
+        return impl
+    return env_choice("QUIP_SEGMENT_IMPL", _HOST_IMPLS, "numpy")
+
+
+_SEGMENT_OPS = ("count", "sum", "min", "max")
+
+_seg_ref_jit = jax.jit(_ref.segment_reduce_ref, static_argnums=(2, 3))
+
+
+def _segment_numpy(vals: np.ndarray, seg: np.ndarray, num_segments: int,
+                   op: str) -> np.ndarray:
+    """Host oracle: per-segment ufunc reductions in row order.
+
+    A stable argsort groups rows by segment while preserving row order
+    within each segment, so each slice is the exact sequence the
+    interpreter's boolean-mask extraction produces — float sums therefore
+    use the same pairwise accumulation and are bit-identical to
+    ``executor._aggregate``.
+    """
+    if np.issubdtype(vals.dtype, np.integer):
+        out_dtype = np.int64
+        lo, hi = np.iinfo(np.int64).min, np.iinfo(np.int64).max
+    else:
+        out_dtype = np.float64
+        lo, hi = -np.inf, np.inf
+    ident = {"sum": 0, "min": hi, "max": lo}[op]
+    out = np.full(num_segments, ident, dtype=out_dtype)
+    order = np.argsort(seg, kind="stable")
+    sv = vals[order]
+    bounds = np.searchsorted(seg[order], np.arange(num_segments + 1))
+    for i in range(num_segments):
+        sl = sv[bounds[i]:bounds[i + 1]]
+        if len(sl) == 0:
+            continue
+        out[i] = sl.sum() if op == "sum" else (
+            sl.min() if op == "min" else sl.max()
+        )
+    return out
+
+
+def segment_reduce(
+    values: Optional[np.ndarray],
+    seg_ids: np.ndarray,
+    num_segments: int,
+    op: str,
+    *,
+    impl: Optional[str] = None,
+) -> np.ndarray:
+    """Grouped-aggregate segment reduction: (n,) values + (n,) segment ids
+    in [0, num_segments) → (num_segments,) per-segment COUNT/SUM/MIN/MAX.
+
+    ``values`` is ignored for ``op="count"`` (pass None).  Empty segments
+    hold the reduction identity (count 0, sum 0, min/max dtype extreme) —
+    callers mask them via the count op.
+
+    ``impl`` (or ``QUIP_SEGMENT_IMPL``): ``numpy`` (default; float64 host
+    reductions, bit-identical to the interpreter's per-group path and the
+    impl the compiled executor uses), ``ref`` (jnp/XLA segment ops), or
+    ``pallas`` (TPU kernel; interpret mode elsewhere).  The device paths
+    compute in int32/float32, so integer results are identical while
+    within int32 range and float results may differ in final-ulp
+    accumulation order — they are benchmark/TPU paths, not the
+    answer-serving default.
+    """
+    impl = resolve_segment_impl(impl)
+    if op not in _SEGMENT_OPS:
+        raise ValueError(f"unknown segment op {op!r}")
+    seg = np.asarray(seg_ids, dtype=np.int64)
+    num_segments = int(num_segments)
+    if op == "count":
+        vals = np.ones(len(seg), dtype=np.int64)
+        op = "sum"  # count ≡ sum of ones, on every impl
+    else:
+        vals = np.asarray(values)
+        if vals.shape != seg.shape:
+            raise ValueError(
+                f"values {vals.shape} and seg_ids {seg.shape} disagree"
+            )
+    if num_segments == 0:
+        return np.zeros(0, dtype=np.int64 if op == "count"
+                        else (np.int64 if np.issubdtype(vals.dtype, np.integer)
+                              else np.float64))
+    if impl == "numpy" or len(seg) == 0:
+        return _segment_numpy(vals, seg, num_segments, op)
+    integer = np.issubdtype(vals.dtype, np.integer)
+    jv = jnp.asarray(vals, dtype=jnp.int32 if integer else jnp.float32)
+    js = jnp.asarray(seg, dtype=jnp.int32)
+    if impl == "pallas":
+        out = segment_reduce_pallas(
+            jv, js, num_segments=num_segments, op=op,
+            interpret=_interpret(),
+        )
+    else:
+        out = _seg_ref_jit(jv, js, num_segments, op)
+    res = np.asarray(out).astype(np.int64 if integer else np.float64)
+    if op in ("min", "max"):
+        # the device paths computed in int32/float32, so empty segments hold
+        # the *compute*-dtype extreme; restamp the output-dtype identity so
+        # every impl honours the same empty-segment contract
+        empty = np.bincount(seg[seg >= 0], minlength=num_segments) == 0
+        if empty.any():
+            if integer:
+                info = np.iinfo(np.int64)
+                res[empty] = info.max if op == "min" else info.min
+            else:
+                res[empty] = np.inf if op == "min" else -np.inf
+    return res
 
 
 def _mode_codes_numpy(codes: np.ndarray, num_classes: int) -> np.ndarray:

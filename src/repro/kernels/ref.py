@@ -20,6 +20,7 @@ __all__ = [
     "masked_knn_ref",
     "neighbor_mean_ref",
     "neighbor_mode_ref",
+    "segment_reduce_ref",
 ]
 
 
@@ -131,6 +132,27 @@ def neighbor_mode_ref(codes: jnp.ndarray, num_classes: int) -> jnp.ndarray:
     onehot = jax.nn.one_hot(codes, num_classes, dtype=jnp.int32)  # (b, k, U)
     counts = onehot.sum(axis=1)  # (b, U)
     return jnp.argmax(counts, axis=1).astype(jnp.int32)
+
+
+def segment_reduce_ref(
+    vals: jnp.ndarray, seg_ids: jnp.ndarray, num_segments: int, op: str
+) -> jnp.ndarray:
+    """Grouped-aggregate segment reduction (the jnp oracle for
+    ``segment_ops.segment_reduce_pallas``).
+
+    vals: (n,); seg_ids: (n,) int32 in [0, num_segments) (negative ids drop
+    the row).  ``op`` is static: sum/min/max — count is a sum of ones, done
+    by the caller.  Empty segments hold the reduction identity of the
+    compute dtype (0 / dtype-max / dtype-min), matching ``jax.ops``
+    semantics; callers mask them via the count op.
+    """
+    if op == "sum":
+        return jax.ops.segment_sum(vals, seg_ids, num_segments=num_segments)
+    if op == "min":
+        return jax.ops.segment_min(vals, seg_ids, num_segments=num_segments)
+    if op == "max":
+        return jax.ops.segment_max(vals, seg_ids, num_segments=num_segments)
+    raise ValueError(f"unknown segment op {op!r}")
 
 
 def attention_ref(q, k, v, causal: bool = True, window=None, scale=None):

@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: segment reductions for grouped aggregates.
+
+The compiled-plan executor (``core/compiled.py``) lowers a grouped
+COUNT/SUM/AVG/MIN/MAX to a segment reduction over the group-id column
+(``inv`` from ``np.unique(keys, return_inverse=True)``).  The host NumPy
+path in ``kernels.ops.segment_reduce`` stays the bit-exact oracle; this
+kernel is the device path (``QUIP_SEGMENT_IMPL=pallas``).
+
+Shape strategy: rows are tiled in RB-sized 1-D blocks; each grid step
+builds a (RB, Sp) one-hot match of its segment ids against a class iota
+and folds it into the (Sp,) accumulator held in the output block (the TPU
+grid is sequential, so ``out_ref`` accumulates across steps — the same
+revisiting pattern as the hash-join build kernel).  Sp is the padded
+segment count; grouped aggregates have group cardinality ≪ rows, so the
+(RB, Sp) block stays VMEM-resident.  Padded rows carry segment id −1,
+which matches no class; padded segments are sliced off by the wrapper.
+
+``op`` is static: ``sum`` accumulates ``+``, ``min``/``max`` accumulate
+``jnp.minimum``/``maximum`` with the dtype identity as the initial fill
+(count is a sum of ones, handled by the wrapper).  Empty segments hold
+the identity; callers mask them via the count op.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["segment_reduce_pallas"]
+
+RB = 512  # rows per block
+LANE = 128  # lane multiple for the segment dimension
+
+_OPS = ("sum", "min", "max")
+
+
+def _pad_axis(x, mult, axis, value):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def _identity(op: str, dtype) -> jnp.ndarray:
+    if op == "sum":
+        return jnp.zeros((), dtype)
+    if jnp.issubdtype(dtype, jnp.integer):
+        info = jnp.iinfo(dtype)
+        return jnp.array(info.max if op == "min" else info.min, dtype)
+    return jnp.array(jnp.inf if op == "min" else -jnp.inf, dtype)
+
+
+def _segment_kernel(vals_ref, seg_ref, out_ref, *, op: str):
+    seg = seg_ref[...]  # (RB,) int32; pad rows are -1
+    vals = vals_ref[...]  # (RB,)
+    sp = out_ref.shape[0]
+    classes = jax.lax.broadcasted_iota(jnp.int32, (seg.shape[0], sp), 1)
+    onehot = seg[:, None] == classes  # (RB, Sp)
+    ident = _identity(op, vals.dtype)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, ident)
+
+    masked = jnp.where(onehot, vals[:, None], ident)
+    if op == "sum":
+        out_ref[...] += masked.sum(axis=0)
+    elif op == "min":
+        out_ref[...] = jnp.minimum(out_ref[...], masked.min(axis=0))
+    else:
+        out_ref[...] = jnp.maximum(out_ref[...], masked.max(axis=0))
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "op", "interpret"))
+def segment_reduce_pallas(
+    vals: jnp.ndarray,
+    seg_ids: jnp.ndarray,
+    *,
+    num_segments: int,
+    op: str,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """(n,) values + (n,) int32 segment ids → (num_segments,) reduction.
+
+    Negative segment ids drop the row (the wrapper pads with −1).
+    """
+    if op not in _OPS:
+        raise ValueError(f"unknown segment op {op!r}")
+    (n,) = vals.shape
+    ident = _identity(op, vals.dtype)
+    v = _pad_axis(vals, RB, 0, ident)
+    s = _pad_axis(seg_ids.astype(jnp.int32), RB, 0, -1)
+    (npad,) = v.shape
+    sp = num_segments + ((-num_segments) % LANE)
+    out = pl.pallas_call(
+        functools.partial(_segment_kernel, op=op),
+        grid=(npad // RB,),
+        in_specs=[
+            pl.BlockSpec((RB,), lambda i: (i,)),
+            pl.BlockSpec((RB,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((sp,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((sp,), vals.dtype),
+        interpret=interpret,
+    )(v, s)
+    return out[:num_segments]

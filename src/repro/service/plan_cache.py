@@ -16,12 +16,22 @@ the registry's invalidation hook calls :meth:`PlanCache.invalidate_table`
 — the cached join order was driven by selectivity scans of the old data,
 so every dependent entry is evicted and the next submission re-plans
 against the mutated registry (see docs/serving.md).
+
+Each entry also carries **per-signature hit counts** (the hotness signal
+``QuipService(compile_after_hits=K)`` promotes on) and any **compiled
+artifacts** lowered for the signature, keyed by (strategy, table epochs).
+Artifacts live and die with their plan entry — eviction and
+``invalidate_table`` drop them together — and the epoch stamp is a second
+defensive gate: an artifact lowered at different epochs is never served
+(see docs/compiled.md "Epoch invalidation").
 """
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, Optional, Tuple
 
+from repro.core.compiled import CompiledPlan
 from repro.core.executor import make_plan
 from repro.core.plan import PlanNode, Query, clone_plan
 from repro.core.relation import MaskedRelation
@@ -51,11 +61,29 @@ def query_signature(query: Query, planner: str = "imputedb") -> Tuple:
             tuple(query.projection), agg)
 
 
+@dataclasses.dataclass
+class _PlanEntry:
+    """One cached signature: the pristine plan, how often it hit, and any
+    compiled artifacts lowered for it.
+
+    ``compiled`` maps strategy → (epochs, artifact); the artifact is either
+    a :class:`CompiledPlan` or the :class:`CompileFallback` that lowering
+    raised — caching the fallback too stops the service from re-attempting
+    a lowering that can never succeed for the signature."""
+
+    plan: PlanNode
+    hits: int = 0
+    compiled: Dict[str, Tuple[Tuple, object]] = dataclasses.field(
+        default_factory=dict
+    )
+
+
 class PlanCache(LruCache):
-    """LRU over ``query_signature`` → pristine SPJ plan, with hit/miss
+    """LRU over ``query_signature`` → :class:`_PlanEntry`, with hit/miss
     counters.  ``get`` always returns a fresh :func:`clone_plan` copy.
     ``invalidate_table`` evicts every plan whose query reads the mutated
-    table — its join order was chosen from now-stale selectivity scans."""
+    table — its join order was chosen from now-stale selectivity scans —
+    and every compiled artifact riding on it."""
 
     def __init__(self, capacity: int = 64, planner: str = "imputedb"):
         super().__init__(capacity)
@@ -63,15 +91,78 @@ class PlanCache(LruCache):
 
     def get(self, query: Query, tables: Dict[str, MaskedRelation],
             planner: Optional[str] = None) -> Tuple[PlanNode, bool]:
-        """Returns ``(plan, hit)``; plans the query on a miss."""
+        """Returns ``(plan, hit)``; plans the query on a miss.
+
+        All hit bookkeeping (the LRU's counters via ``lookup`` plus the
+        entry's per-signature count) lands *before* ``clone_plan`` runs, so
+        a clone failure surfaces to the caller without desyncing the
+        counters from the served state."""
         planner = planner or self.planner
         sig = query_signature(query, planner)
-        cached = self.lookup(sig)
-        if cached is not None:
-            return clone_plan(cached), True
+        entry = self.lookup(sig)
+        if entry is not None:
+            entry.hits += 1
+            return clone_plan(entry.plan), True
         plan = make_plan(query, tables, planner=planner)
-        self.insert(sig, plan)
+        self.insert(sig, _PlanEntry(plan))
         return clone_plan(plan), False
+
+    # -- per-signature hotness + compiled artifacts --------------------- #
+    def hit_count(self, query: Query, planner: Optional[str] = None) -> int:
+        """Hits served for the signature so far (0 when uncached).  A pure
+        peek: no LRU touch, no hit/miss accounting."""
+        sig = query_signature(query, planner or self.planner)
+        entry = self._entries.get(sig)
+        return entry.hits if entry is not None else 0
+
+    def compiled_artifact(self, query: Query, strategy: str, epochs: Tuple,
+                          planner: Optional[str] = None) -> Optional[object]:
+        """Cached artifact for (signature, strategy) iff it was lowered at
+        exactly ``epochs``; a stale-epoch artifact is dropped, not served.
+        Registry invalidation hooks already evict the whole entry on
+        mutation — the epoch stamp is the defensive second gate."""
+        sig = query_signature(query, planner or self.planner)
+        entry = self._entries.get(sig)
+        if entry is None:
+            return None
+        cached = entry.compiled.get(strategy)
+        if cached is None:
+            return None
+        stamped_epochs, artifact = cached
+        if stamped_epochs != epochs:
+            del entry.compiled[strategy]
+            return None
+        return artifact
+
+    def store_compiled(self, query: Query, strategy: str, epochs: Tuple,
+                       artifact: object,
+                       planner: Optional[str] = None) -> None:
+        """Attach a lowered artifact (or its :class:`CompileFallback`) to
+        the signature's entry; a no-op when the signature is uncached
+        (capacity 0 / already evicted) — the artifact simply isn't kept."""
+        sig = query_signature(query, planner or self.planner)
+        entry = self._entries.get(sig)
+        if entry is not None:
+            entry.compiled[strategy] = (epochs, artifact)
+
+    def compiled_count(self) -> int:
+        """Live :class:`CompiledPlan` artifacts (cached fallbacks excluded)."""
+        return sum(
+            1
+            for e in self._entries.values()
+            for _epochs, a in e.compiled.values()
+            if isinstance(a, CompiledPlan)
+        )
+
+    def summary(self) -> Dict[str, object]:
+        """``stats()`` plus the per-signature view: hit counts and live
+        compiled-artifact totals, keyed by the canonical signature."""
+        out: Dict[str, object] = dict(self.stats())
+        out["compiled"] = self.compiled_count()
+        out["signature_hits"] = {
+            sig: e.hits for sig, e in self._entries.items()
+        }
+        return out
 
     def _key_tables(self, key: Tuple) -> Tuple[str, ...]:
         return key[1]  # query_signature: (planner, tables, ...)

@@ -37,6 +37,12 @@ import threading
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional, Tuple
 
+from repro.core.compiled import (
+    CompiledPlan,
+    CompileFallback,
+    compile_plan,
+    resolve_exec_impl,
+)
 from repro.core.executor import ExecutionResult
 from repro.core.extensions import (
     merge_stats,
@@ -118,8 +124,22 @@ class QuipService:
         tenant_quotas: Optional[Dict] = None,
         default_tenant_quota: Optional[int] = None,
         workers: int = 0,
+        exec_impl: Optional[str] = None,
+        compile_after_hits: int = 2,
     ):
         assert max_inflight >= 1
+        # compiled tensor plans (docs/compiled.md): with
+        # exec_impl="compiled" (or QUIP_EXEC_IMPL=compiled) a signature is
+        # lowered via compile_plan once its plan-cache hit count reaches
+        # compile_after_hits; ineligible combinations (lazy/adaptive,
+        # use_vf, active MIN/MAX pushdown) cache their CompileFallback and
+        # keep running the morsel interpreter, bit-identically.
+        self.exec_impl = resolve_exec_impl(exec_impl)
+        if compile_after_hits < 1:
+            raise ValueError(
+                f"compile_after_hits must be >= 1, got {compile_after_hits}"
+            )
+        self.compile_after_hits = int(compile_after_hits)
         self.registry: TableRegistry = (
             tables if isinstance(tables, TableRegistry)
             else TableRegistry(tables)
@@ -224,7 +244,7 @@ class QuipService:
         # model) are deliberately NOT part of the key: answers are
         # policy-independent (see docs/serving.md "Scheduling & QoS"),
         # so an answer computed under one policy is valid under any other
-        exec_sig = (strategy, self.shared_impute) + tuple(
+        exec_sig = (strategy, self.shared_impute, self.exec_impl) + tuple(
             sorted(self._exec_kwargs.items())
         )
         return (query_signature(query, self.plan_cache.planner), exec_sig,
@@ -236,12 +256,43 @@ class QuipService:
         pool mode; either way a deep waiting queue holds no table copies
         and the latency clock covers planning like a cold serial run."""
         with self._lock:
+            fallback = None
             if strategy == "offline":
                 # the offline baseline never consults a plan — don't pay for
                 # (or skew the telemetry of) planning it
                 plan, hit = None, False
             else:
                 plan, hit = self.plan_cache.get(query, self.tables)
+            if (plan is not None and self.exec_impl == "compiled" and hit
+                    and self.plan_cache.hit_count(query)
+                    >= self.compile_after_hits):
+                # hot signature: serve (or lower and stamp) a compiled
+                # artifact keyed by the tables' current epochs — a stale
+                # stamp is never served (plan_cache.compiled_artifact),
+                # and mutation hooks evict the whole entry anyway
+                epochs = self.registry.epochs(query.tables)
+                artifact = self.plan_cache.compiled_artifact(
+                    query, strategy, epochs
+                )
+                if artifact is None:
+                    try:
+                        artifact = compile_plan(
+                            query, plan, self.tables, strategy,
+                            use_vf=self._exec_kwargs["use_vf"],
+                            minmax_opt=self._exec_kwargs["minmax_opt"],
+                            join_impl=self._exec_kwargs["join_impl"],
+                        )
+                    except CompileFallback as e:
+                        # cache the fallback too — this signature can
+                        # never lower under these knobs; don't retry
+                        artifact = e
+                    self.plan_cache.store_compiled(
+                        query, strategy, epochs, artifact
+                    )
+                if isinstance(artifact, CompiledPlan):
+                    plan = artifact
+                else:
+                    fallback = artifact
             # snapshot references + epochs atomically: the registry is
             # copy-on-write, so the heavy per-table copies can run off the
             # lock on the snapshot objects (never mutated in place), while
@@ -252,6 +303,8 @@ class QuipService:
             key = self._result_key(query, strategy)
         tables = {t: rel.copy() for t, rel in snaps.items()}
         engine = self._make_engine(tables)
+        if fallback is not None:
+            engine.counters.compile_fallbacks += 1
         return plan, engine, tables, hit, key
 
     def submit(self, query: Query, *, strategy: Optional[str] = None,
@@ -627,7 +680,8 @@ class QuipService:
                 # no relational work ran — record the hit with empty
                 # counters so totals keep meaning "work actually done"
                 counters = ExecutionCounters(
-                    join_impl=session.result.counters.join_impl
+                    join_impl=session.result.counters.join_impl,
+                    exec_impl=session.result.counters.exec_impl,
                 )
             else:
                 counters = session.result.counters
@@ -720,6 +774,8 @@ class QuipService:
         out.update({
             f"plan_cache_{k}": v for k, v in self.plan_cache.stats().items()
         })
+        out["plan_cache_compiled"] = self.plan_cache.compiled_count()
+        out["exec_impl"] = self.exec_impl
         if self.result_cache is not None:
             out.update({
                 f"result_cache_{k}": v

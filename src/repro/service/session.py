@@ -20,6 +20,7 @@ from __future__ import annotations
 import time
 from typing import Callable, Dict, Iterator, Optional, Tuple
 
+from repro.core.compiled import CompiledPlan
 from repro.core.executor import (
     ExecutionResult,
     QuipExecutor,
@@ -33,8 +34,9 @@ __all__ = ["QuerySession", "QUEUED", "RUNNING", "DONE", "FAILED"]
 
 QUEUED, RUNNING, DONE, FAILED = "queued", "running", "done", "failed"
 
-# plan (None for offline), engine, table copies, plan_cache_hit,
-# result-cache key (epochs observed at admission; None = don't cache)
+# plan (None for offline, a CompiledPlan when the service promoted the
+# signature — see QuipService compile_after_hits), engine, table copies,
+# plan_cache_hit, result-cache key (epochs at admission; None = don't cache)
 SessionSetup = Callable[
     [], Tuple[Optional[PlanNode], ImputationService,
               Dict[str, MaskedRelation], bool, Optional[Tuple]]
@@ -143,6 +145,11 @@ class QuerySession:
              self.plan_cache_hit, self.result_key) = self._setup()
             if self.strategy == "offline":
                 self._gen = self._offline_steps()
+            elif isinstance(self.plan, CompiledPlan):
+                # promoted hot signature: one straight-line vectorized pass
+                # (a single blocking step, like offline — there are no
+                # morsels to interleave)
+                self._gen = self._compiled_steps()
             else:
                 executor = QuipExecutor(
                     self.query,
@@ -160,6 +167,11 @@ class QuerySession:
 
     def _offline_steps(self) -> Iterator[None]:
         self.result = execute_offline(self.query, self.tables, self.engine)
+        return
+        yield  # pragma: no cover - makes this a generator
+
+    def _compiled_steps(self) -> Iterator[None]:
+        self.result = self.plan.run(self.tables, self.engine)
         return
         yield  # pragma: no cover - makes this a generator
 

@@ -1,7 +1,11 @@
 """Executor strategy equivalence (paper §5 correctness invariant): the
 answer multiset of ``offline`` == ``eager`` == ``lazy`` == ``adaptive`` on
 small synthetic instances, with both the NumPy and the kernel-backed join
-paths (``join_impl`` ∈ {numpy, ref, pallas})."""
+paths (``join_impl`` ∈ {numpy, ref, pallas}), and — for every strategy —
+under ``QUIP_EXEC_IMPL=compiled`` (docs/compiled.md): eligible plans lower
+to the vectorized whole-relation program, ineligible ones fall back to the
+interpreter, and either way answers AND imputation counts stay
+bit-identical to the default path."""
 
 from __future__ import annotations
 
@@ -86,3 +90,51 @@ def test_kernel_join_path_matches_numpy_counters(join_impl):
     assert other.answer_tuples() == base.answer_tuples()
     assert other.counters.imputations == base.counters.imputations
     assert other.counters.join_tests == base.counters.join_tests
+
+
+@pytest.mark.parametrize("use_vf", [True, False])
+@pytest.mark.parametrize("strategy", STRATEGIES + ["imputedb"])
+def test_compiled_exec_matches_interp(strategy, use_vf, monkeypatch):
+    """The full strategy matrix under ``QUIP_EXEC_IMPL=compiled``.
+
+    Only eager (and its ``imputedb`` alias, which forces ``use_vf=False``
+    itself) with the VF list off is lowering-eligible; every other cell
+    must take the interpreter fallback.  In *all* cells the answers and
+    the deduplicated imputation count must be bit-identical to the default
+    interpreter run — the compiled path is an optimization, never a
+    semantics change."""
+    tables, _clean, q, engine_factory = _instance(17, 2)
+
+    def run(exec_env):
+        if exec_env is None:
+            monkeypatch.delenv("QUIP_EXEC_IMPL", raising=False)
+        else:
+            monkeypatch.setenv("QUIP_EXEC_IMPL", exec_env)
+        engine = engine_factory()
+        if strategy == "offline":
+            return execute_offline(q, tables, engine)
+        return execute_quip(
+            q, tables, engine, strategy=strategy, morsel_rows=12,
+            use_vf=use_vf,
+        )
+
+    base = run(None)
+    compiled = run("compiled")
+    assert Counter(compiled.answer_tuples()) == Counter(base.answer_tuples())
+    assert compiled.counters.imputations == base.counters.imputations
+
+    if strategy == "offline":
+        return  # never consults a plan — nothing to lower or fall back from
+    eligible = strategy == "imputedb" or (strategy == "eager" and not use_vf)
+    if eligible:
+        assert compiled.counters.exec_impl == "compiled"
+        assert compiled.counters.compiled_hits == 1
+        assert compiled.counters.compile_fallbacks == 0
+        # the batched pre-pass is the speedup lever: one flush per
+        # (operator, attr) instead of one per (morsel, attr)
+        assert (compiled.counters.impute_batches
+                <= base.counters.impute_batches)
+    else:
+        assert compiled.counters.exec_impl == "interp"
+        assert compiled.counters.compile_fallbacks == 1
+        assert compiled.counters.compiled_hits == 0
