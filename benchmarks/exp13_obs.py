@@ -1,0 +1,207 @@
+"""Experiment 13: observability — tracing changes nothing, and costs
+nothing when off.
+
+Runs the exp8-style skewed multi-tenant serving stream twice over the
+same tables: once plain (tracer off — the default), once with the unit-
+clock tracer **and** explain provenance on.  Acceptance invariants, all
+deterministic (wall clock is recorded, never asserted — CI runners flake):
+
+* **bit-identical execution** — per-ticket answers, total imputations and
+  scheduler morsel steps are equal between the two runs (tracing is
+  observation, not participation);
+* **explain reconciles** — every ticket's provenance report totals equal
+  its recorded ``ExecutionCounters.imputations`` exactly;
+* **zero-overhead off mode** — a service without ``QUIP_TRACE`` holds the
+  shared :data:`NULL_TRACER`, whose ``span()`` returns the shared
+  :data:`NULL_SPAN` singleton and which records nothing;
+* **bounded on-mode footprint** — spans recorded per unit of Python work
+  (temp tuples + imputations + morsel steps) stay under 5%, so tracing
+  cannot silently become a second execution engine;
+* **valid exports** — the Chrome trace-event JSON and the Prometheus
+  exposition pass schema validation, and both land in
+  ``benchmarks/artifacts/`` (uploaded by the CI smoke step).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+from benchmarks.common import IMPUTER_FACTORIES
+from repro.data.queries import serving_workload
+from repro.data.synthetic import wifi_dataset
+from repro.obs import NULL_SPAN, NULL_TRACER, Tracer
+from repro.service import QuipService
+
+NAME = "exp13_obs"
+
+STRATEGY = "adaptive"
+MORSEL_ROWS = 4096
+IMPUTER = "knn"
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+
+# deterministic on-mode footprint gate: recorded spans per Python-work
+# unit (temp tuples + imputations + morsel steps — counters that are
+# bit-identical run-to-run, unlike wall time)
+MAX_SPANS_PER_WORK_UNIT = 0.05
+
+
+def _run_stream(stream, tables, *, tracer=None, explain=None) -> Dict:
+    svc = QuipService(
+        tables, IMPUTER_FACTORIES[IMPUTER], strategy=STRATEGY,
+        morsel_rows=MORSEL_ROWS, shared_impute=False, max_inflight=4,
+        cost_model="unit", tracer=tracer, explain=explain,
+    )
+    t0 = time.perf_counter()
+    tickets = [svc.submit(q, tenant=tenant) for tenant, q in stream]
+    svc.run_until_idle()
+    wall = time.perf_counter() - t0
+    answers = [sorted(svc.answers(t)) for t in tickets]
+    total = svc.serving.total_counters()
+    summary = svc.summary()
+    return {
+        "svc": svc, "tickets": tickets, "answers": answers,
+        "wall_s": round(wall, 4),
+        "imputations": total.imputations,
+        "morsel_steps": summary["morsel_steps"],
+        "work_units": (total.temp_tuples + total.imputations
+                       + summary["morsel_steps"]),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# export-format validators (schema only — no golden values)
+# --------------------------------------------------------------------------- #
+def _validate_chrome_trace(doc: Dict) -> int:
+    assert set(doc) >= {"traceEvents", "metadata"}, sorted(doc)
+    assert doc["metadata"]["clock"] == "unit"
+    json.dumps(doc)  # must round-trip as-is
+    events = doc["traceEvents"]
+    assert events, "empty trace"
+    for ev in events:
+        assert ev["ph"] in ("X", "i", "M"), ev
+        assert isinstance(ev["name"], str) and "pid" in ev and "tid" in ev
+        if ev["ph"] == "X":
+            assert ev["dur"] >= 0 and "ts" in ev
+        elif ev["ph"] == "i":
+            assert ev["s"] == "t"
+    return sum(1 for ev in events if ev["ph"] != "M")
+
+
+def _validate_prometheus(text: str) -> int:
+    types: Dict[str, str] = {}
+    helped = set()
+    assert text.endswith("\n")
+    for line in text.strip().splitlines():
+        assert line, "blank line inside exposition"
+        if line.startswith("# HELP "):
+            helped.add(line.split()[2])
+            continue
+        if line.startswith("# TYPE "):
+            _h, _t, name, kind = line.split()
+            assert name in helped, f"# TYPE before # HELP for {name}"
+            assert kind in ("counter", "gauge", "histogram"), kind
+            types[name] = kind
+            continue
+        name = line.split()[0].split("{")[0]
+        base = name
+        for suffix in ("_bucket", "_sum", "_count"):
+            if name.endswith(suffix) and name[: -len(suffix)] in types:
+                base = name[: -len(suffix)]
+        assert base in types, f"sample {name} has no # TYPE"
+        float(line.rsplit(" ", 1)[1].replace("+Inf", "inf"))
+    assert any(k == "histogram" for k in types.values())
+    return len(types)
+
+
+def run(fast: bool = True) -> List[Dict]:
+    if fast:
+        tables, _ = wifi_dataset(n_users=150, n_wifi=2000, n_occ=1000)
+        n_queries = 20
+    else:
+        tables, _ = wifi_dataset()
+        n_queries = 40
+    stream = list(serving_workload("wifi", tables, n_queries=n_queries,
+                                   n_templates=6, n_tenants=4, seed=5))
+
+    plain = _run_stream(stream, tables)
+    tracer = Tracer(enabled=True, clock="unit")
+    traced = _run_stream(stream, tables, tracer=tracer, explain=True)
+
+    # -- zero-overhead off mode: structural no-op contract ----------------- #
+    svc_plain = plain.pop("svc")
+    assert svc_plain.tracer is NULL_TRACER, "untraced service built a tracer"
+    assert svc_plain.tracer.span("probe") is NULL_SPAN
+    assert svc_plain.tracer.spans() == [], "disabled tracer recorded spans"
+    assert not svc_plain.explain_enabled
+
+    # -- explain reconciliation across every ticket ------------------------ #
+    svc = traced.pop("svc")
+    reconciled = 0
+    for record in svc.serving.records:
+        report = svc.explain(record.ticket)
+        assert report["totals"]["imputed_cells"] \
+            == record.counters.imputations, (
+                record.ticket, report["totals"], record.counters.imputations)
+        reconciled += 1
+
+    # -- artifacts + schema validation ------------------------------------- #
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    trace_path = os.path.join(ARTIFACT_DIR, "exp13_trace.json")
+    doc = svc.export_trace(trace_path)
+    n_events = _validate_chrome_trace(json.loads(open(trace_path).read()))
+    prom_path = os.path.join(ARTIFACT_DIR, "exp13_metrics.prom")
+    prom = svc.metrics(fmt="prometheus")
+    with open(prom_path, "w") as fh:
+        fh.write(prom)
+    n_metrics = _validate_prometheus(prom)
+
+    spans_recorded = len(tracer.spans())
+    plain.pop("tickets"), traced.pop("tickets")
+    base_answers = plain.pop("answers")
+    rows = [
+        dict(mode="plain", queries=len(stream), **plain),
+        dict(mode="traced", queries=len(stream),
+             answers_match_plain=int(traced.pop("answers") == base_answers),
+             spans_recorded=spans_recorded,
+             trace_events=n_events,
+             chrome_events_total=len(doc["traceEvents"]),
+             prometheus_metrics=n_metrics,
+             explains_reconciled=reconciled,
+             **traced),
+    ]
+    svc.close()
+    svc_plain.close()
+    return rows
+
+
+def derived(rows: List[Dict]) -> Dict[str, float]:
+    by_mode = {r["mode"]: r for r in rows}
+    plain, traced = by_mode["plain"], by_mode["traced"]
+    # acceptance invariants — all deterministic (wall recorded, not asserted)
+    assert traced["answers_match_plain"] == 1, "tracing changed the answers"
+    assert traced["imputations"] == plain["imputations"], \
+        "tracing changed the imputation total"
+    assert traced["morsel_steps"] == plain["morsel_steps"], \
+        "tracing changed the scheduling"
+    assert traced["explains_reconciled"] == traced["queries"], \
+        "a ticket's explain report is missing"
+    assert traced["spans_recorded"] > 0 and traced["prometheus_metrics"] > 0
+    ratio = traced["spans_recorded"] / max(traced["work_units"], 1)
+    assert ratio <= MAX_SPANS_PER_WORK_UNIT, (
+        f"tracing footprint {ratio:.4f} spans/work-unit exceeds "
+        f"{MAX_SPANS_PER_WORK_UNIT}"
+    )
+    return {
+        "answers_match": float(traced["answers_match_plain"]),
+        "explains_reconciled": traced["explains_reconciled"],
+        "obs_span_count": traced["spans_recorded"],
+        "obs_overhead_ratio": round(ratio, 5),
+        "prometheus_metrics": traced["prometheus_metrics"],
+        "trace_events": traced["trace_events"],
+        "traced_wall_overhead": round(
+            traced["wall_s"] / max(plain["wall_s"], 1e-9) - 1.0, 3
+        ),
+    }

@@ -3,13 +3,18 @@
     PYTHONPATH=src python -m benchmarks.run [--full] [--only exp1,...]
 
 Prints a per-experiment summary plus a ``name,value`` derived-metrics CSV,
-and writes benchmarks/results.json.
+and writes benchmarks/results.json.  Each experiment also appends one
+JSONL line — timestamp, scale, wall seconds, derived metrics — to
+``benchmarks/history/<name>.jsonl`` so runs accumulate a machine-readable
+timing history (``--history-dir`` to relocate, ``--no-history`` to skip).
 """
 
 from __future__ import annotations
 
 import argparse
+import datetime
 import json
+import os
 import sys
 import time
 
@@ -26,6 +31,7 @@ from benchmarks import (
     exp10_qos,
     exp11_workers,
     exp12_compiled,
+    exp13_obs,
     kernels_micro,
 )
 
@@ -42,8 +48,21 @@ MODULES = [
     exp10_qos,
     exp11_workers,
     exp12_compiled,
+    exp13_obs,
     kernels_micro,
 ]
+
+
+def _append_history(history_dir: str, name: str, entry: dict) -> None:
+    """One JSONL line per run per experiment — append-only, best-effort
+    (a read-only checkout must not fail the benchmark)."""
+    try:
+        os.makedirs(history_dir, exist_ok=True)
+        path = os.path.join(history_dir, f"{name}.jsonl")
+        with open(path, "a") as fh:
+            fh.write(json.dumps(entry, default=str) + "\n")
+    except OSError as e:  # pragma: no cover - exotic fs only
+        print(f"history append failed for {name}: {e}", file=sys.stderr)
 
 
 def main(argv=None) -> int:
@@ -52,6 +71,10 @@ def main(argv=None) -> int:
                     help="paper-scale workloads (slower)")
     ap.add_argument("--only", default=None)
     ap.add_argument("--out", default="benchmarks/results.json")
+    ap.add_argument("--history-dir", default="benchmarks/history",
+                    help="where per-experiment timing history accumulates")
+    ap.add_argument("--no-history", action="store_true",
+                    help="do not append to the timing history")
     args = ap.parse_args(argv)
 
     only = set(args.only.split(",")) if args.only else None
@@ -64,10 +87,20 @@ def main(argv=None) -> int:
         try:
             rows = mod.run(fast=not args.full)
             der = mod.derived(rows)
+            wall = time.time() - t0
             all_results[mod.NAME] = {"rows": rows, "derived": der}
-            print(f"\n=== {mod.NAME} ({time.time()-t0:.1f}s) ===")
+            print(f"\n=== {mod.NAME} ({wall:.1f}s) ===")
             for k, v in der.items():
                 print(f"{mod.NAME}/{k},{v}")
+            if not args.no_history:
+                _append_history(args.history_dir, mod.NAME, {
+                    "ts": datetime.datetime.now(
+                        datetime.timezone.utc
+                    ).isoformat(timespec="seconds"),
+                    "fast": not args.full,
+                    "wall_s": round(wall, 3),
+                    "derived": der,
+                })
         except Exception as e:  # noqa: BLE001
             failures.append((mod.NAME, repr(e)))
             print(f"\n=== {mod.NAME} FAILED: {e!r} ===")

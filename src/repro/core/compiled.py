@@ -55,7 +55,8 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.env import env_choice
-from repro.core.operators import full_verify, verify_values
+from repro.core.operators import full_verify, op_kind, verify_values
+from repro.obs.trace import NULL_SPAN, NULL_TRACER
 from repro.core.plan import (
     AggregateNode,
     JoinNode,
@@ -228,6 +229,9 @@ class _CompiledRun:
         self.engine = engine
         self.stats: RuntimeStats = engine.stats
         self.counters: ExecutionCounters = engine.counters
+        # observability rides on the engine, same as the interpreter
+        self.tracer = getattr(engine, "tracer", NULL_TRACER)
+        self.provenance = getattr(engine, "provenance", None)
 
     # full_verify() notifies drops for bloom-liveness bookkeeping; the
     # compiled path has no VF machinery, so drops need no side effects
@@ -242,11 +246,15 @@ class _CompiledRun:
         self.counters.join_impl = self.cp.join_impl
         self.counters.exec_impl = "compiled"
         self.counters.compiled_hits += 1
-        rel = self._node(self.cp.body)
-        if self.cp.agg is not None:
-            rel = self._aggregate(rel, self.cp.agg)
-        elif self.cp.proj is not None:
-            rel = rel.project(list(self.cp.proj))
+        tr = self.tracer
+        with (tr.span("compiled_exec", join_impl=self.cp.join_impl)
+              if tr.enabled else NULL_SPAN) as sp:
+            rel = self._node(self.cp.body)
+            if self.cp.agg is not None:
+                rel = self._aggregate(rel, self.cp.agg)
+            elif self.cp.proj is not None:
+                rel = rel.project(list(self.cp.proj))
+            sp.set(rows=rel.num_rows)
         self.counters.wall_seconds = (
             time.perf_counter() - t0
         ) + self.engine.simulated_seconds
@@ -310,7 +318,14 @@ class _CompiledRun:
         probe_keys = np.where(
             p_present, probe.values(l_attr), np.int64(-(2 ** 61))
         ).astype(np.int64)
-        p_idx, b_idx = multi_match(b_keys, probe_keys, impl=self.cp.join_impl)
+        tr = self.tracer
+        with (tr.span("kernel:multi_match", cat="kernel", node=node.node_id,
+                      impl=self.cp.join_impl, build=len(b_keys),
+                      probe=len(probe_keys))
+              if tr.enabled else NULL_SPAN):
+            p_idx, b_idx = multi_match(
+                b_keys, probe_keys, impl=self.cp.join_impl
+            )
         dt = time.perf_counter() - t0
         n_present = int(p_present.sum())
         self.counters.join_tests += n_present
@@ -385,7 +400,17 @@ class _CompiledRun:
         rows, tids = rows[ok_tid], tids[ok_tid]
         if len(rows) == 0:
             return rows, rows
-        values = self._request_values(t, attr, tids)
+        prov = self.provenance
+        if prov is not None:
+            # explain parity with the interpreter: the compiled path only
+            # exists for eager, where every decision is "impute now"
+            prov.record_decision(
+                op_kind(node), node.node_id, attr, (), len(rows), True, {},
+                "strategy:eager")
+            with prov.at(op_kind(node), node.node_id):
+                values = self._request_values(t, attr, tids)
+        else:
+            values = self._request_values(t, attr, tids)
         passed = verify_values(node, attr, values)
         if extra_check is not None:
             passed &= extra_check.evaluate_values(values)
@@ -434,6 +459,16 @@ class _CompiledRun:
             seg = inv
             vals = None
         impl = self.cp.segment_impl
+        tr = self.tracer
+        with (tr.span("kernel:segment_reduce", cat="kernel", op=op,
+                      impl=impl, groups=num_groups)
+              if tr.enabled else NULL_SPAN):
+            return self._aggregate_grouped(
+                rel, op, attr, gb, out_name, kind, uniq, seg, vals,
+                num_groups, impl)
+
+    def _aggregate_grouped(self, rel, op, attr, gb, out_name, kind, uniq,
+                           seg, vals, num_groups, impl):
         counts = kops.segment_reduce(None, seg, num_groups, "count", impl=impl)
         if op == "count":
             out_vals = counts

@@ -35,7 +35,12 @@ from repro.core.plan import (
 from repro.core.schema import table_of
 from repro.core.stats import RuntimeStats
 
-__all__ = ["obligated_attributes", "expected_costs", "decide_impute"]
+__all__ = [
+    "obligated_attributes",
+    "expected_costs",
+    "decide_impute",
+    "decide_impute_explain",
+]
 
 
 def obligated_attributes(query: Query, table_attrs: Dict[str, List[str]]) -> Set[str]:
@@ -123,12 +128,39 @@ def decide_impute(
     obligated: Set[str],
 ) -> bool:
     """True → impute now; False → delay (preserve)."""
+    return decide_impute_explain(
+        node, attr, missing_attrs, stats, strategy, obligated
+    )[0]
+
+
+def decide_impute_explain(
+    node: PlanNode,
+    attr: str,
+    missing_attrs: Set[str],
+    stats: RuntimeStats,
+    strategy: str,
+    obligated: Set[str],
+) -> Tuple[bool, Dict[str, float], str]:
+    """The decision *with its evidence*: ``(impute, costs, reason)``.
+
+    ``costs`` holds the §9.2 expected-cost terms when the adaptive branch
+    computed them (empty for the constant strategies / obligated
+    short-circuit — nothing was estimated, and the provenance layer must
+    not pretend otherwise).  ``reason`` is one of ``strategy:eager``,
+    ``strategy:lazy``, ``obligated``, ``cost:impute``, ``cost:delay``."""
     if strategy == "eager":
-        return True
+        return True, {}, "strategy:eager"
     if strategy == "lazy":
-        return False
+        return False, {}, "strategy:lazy"
     assert strategy == "adaptive", strategy
     if attr in obligated:
-        return True  # §6.1: no benefit in delaying
+        return True, {}, "obligated"  # §6.1: no benefit in delaying
     ei_i, ei_d, eq_i, eq_d = expected_costs(node, attr, missing_attrs, stats)
-    return (ei_i - ei_d) + (eq_i - eq_d) < 0.0
+    impute = (ei_i - ei_d) + (eq_i - eq_d) < 0.0
+    costs = {
+        "est_imp_impute": ei_i,
+        "est_imp_delay": ei_d,
+        "est_qp_impute": eq_i,
+        "est_qp_delay": eq_d,
+    }
+    return impute, costs, ("cost:impute" if impute else "cost:delay")

@@ -14,14 +14,17 @@ dispatch vars (``QUIP_JOIN_IMPL``, ``QUIP_KNN_IMPL``, ``QUIP_EXEC_IMPL``,
 *after* silently skipping the env var's precedence rules; now garbage
 fails loud with the variable name and the accepted spellings, exactly
 like ``env_flag``.
+
+:func:`env_int` is the integer sibling (``QUIP_FUZZ_SEED``): unset means
+the default, garbage raises instead of silently falling back.
 """
 
 from __future__ import annotations
 
 import os
-from typing import Sequence
+from typing import Optional, Sequence
 
-__all__ = ["env_flag", "env_choice"]
+__all__ = ["env_flag", "env_choice", "env_int"]
 
 _TRUE = frozenset({"1", "true", "yes", "on"})
 _FALSE = frozenset({"0", "false", "no", "off"})
@@ -62,3 +65,21 @@ def env_choice(name: str, choices: Sequence[str], default: str) -> str:
     raise ValueError(
         f"{name}={raw!r} is not a valid choice (expected one of {sorted(choices)})"
     )
+
+
+def env_int(name: str, default: Optional[int] = None) -> Optional[int]:
+    """Integer env var ``name`` (e.g. ``QUIP_FUZZ_SEED``).
+
+    Unset (or empty) returns ``default``; any non-integer value raises
+    ``ValueError`` — a typo'd seed must not silently fall back to the
+    default sweep.
+    """
+    raw = os.environ.get(name)
+    if raw is None or raw.strip() == "":
+        return default
+    try:
+        return int(raw.strip())
+    except ValueError:
+        raise ValueError(
+            f"{name}={raw!r} is not an integer"
+        ) from None

@@ -34,8 +34,10 @@ from repro.core.operators import (
     apply_filter_set,
     decide_groups,
     full_verify,
+    op_kind,
     verify_values,
 )
+from repro.obs.trace import NULL_SPAN, NULL_TRACER
 from repro.core.optimizer import collect_stats, imputedb_plan, naive_plan
 from repro.core.plan import (
     AggregateNode,
@@ -136,6 +138,10 @@ class QuipExecutor:
         self.stats: RuntimeStats = engine.stats
         self.counters: ExecutionCounters = engine.counters
         self.counters.join_impl = self.join_impl
+        # observability rides on the engine (the serving layer injects it
+        # there); bare engines get the shared no-op tracer / no provenance
+        self.tracer = getattr(engine, "tracer", NULL_TRACER)
+        self.provenance = getattr(engine, "provenance", None)
         # batched imputation service: coalesce impute requests where the
         # morsel pipeline is provably order-insensitive (see _join / _rho)
         self.batching = bool(getattr(engine, "batching", False))
@@ -328,7 +334,12 @@ class QuipExecutor:
         # coalescing happens upstream — whole-relation build sides and ρ
         # deferral hand larger groups to this call — while the columnar
         # cache dedups repeated requests across pipeline copies.
-        values = self._request_values(t, attr, tids)
+        prov = self.provenance
+        if prov is not None:
+            with prov.at(op_kind(node), node.node_id):
+                values = self._request_values(t, attr, tids)
+        else:
+            values = self._request_values(t, attr, tids)
         passed = verify_values(node, attr, values)
         if extra_check is not None:
             passed &= extra_check.evaluate_values(values)
@@ -459,6 +470,14 @@ class QuipExecutor:
 
     # -- σ̂ ----------------------------------------------------------------#
     def _select(self, node: SelectNode, rel: MaskedRelation) -> MaskedRelation:
+        tr = self.tracer
+        with (tr.span("op:select", node=node.node_id, rows=rel.num_rows)
+              if tr.enabled else NULL_SPAN) as sp:
+            out = self._select_body(node, rel)
+            sp.set(kept=out.num_rows)
+        return out
+
+    def _select_body(self, node: SelectNode, rel: MaskedRelation) -> MaskedRelation:
         rel = apply_filter_set(self, node, rel)
         rel = apply_dynamic_preds(self, node, rel)
         if rel.num_rows == 0:
@@ -508,28 +527,34 @@ class QuipExecutor:
         # plans) keep the seed streaming path.  (adaptive's cost inputs
         # coarsen from morsel to operand granularity; its decisions are
         # wall-clock-dependent either way and answers are invariant.)
-        prev_whole = self._scan_whole
-        if self.batching and not any(
-            isinstance(sub, JoinNode) for sub in walk(node.children[1])
-        ):
-            self._scan_whole = True
-        try:
-            # build-side subtrees fan out across the worker pool when one
-            # is attached (morsel-parallel materialization)
-            parts = list(self._stream_subtree(node.children[1]))
-        finally:
-            self._scan_whole = prev_whole
-        build = (
-            concat_relations(parts)
-            if parts
-            else self._empty_of(node.children[1])
-        )
-        build = self._prepare_join_side(node, js, "R", r_attr, build)
-        js.set_snapshot("R", build)
-        self.blooms[r_attr].insert(build.values(r_attr)[build.is_present(r_attr)])
-        self.consumed[r_attr] = True
-        js.sides["R"].consumed = True
-        self.maybe_complete_bloom(r_attr)
+        tr = self.tracer
+        with (tr.span("op:join_build", node=node.node_id, attr=r_attr)
+              if tr.enabled else NULL_SPAN) as bsp:
+            prev_whole = self._scan_whole
+            if self.batching and not any(
+                isinstance(sub, JoinNode) for sub in walk(node.children[1])
+            ):
+                self._scan_whole = True
+            try:
+                # build-side subtrees fan out across the worker pool when one
+                # is attached (morsel-parallel materialization)
+                parts = list(self._stream_subtree(node.children[1]))
+            finally:
+                self._scan_whole = prev_whole
+            build = (
+                concat_relations(parts)
+                if parts
+                else self._empty_of(node.children[1])
+            )
+            build = self._prepare_join_side(node, js, "R", r_attr, build)
+            js.set_snapshot("R", build)
+            self.blooms[r_attr].insert(
+                build.values(r_attr)[build.is_present(r_attr)]
+            )
+            self.consumed[r_attr] = True
+            js.sides["R"].consumed = True
+            self.maybe_complete_bloom(r_attr)
+            bsp.set(build_rows=build.num_rows)
 
         b_present = build.is_present(r_attr)
         b_keys = np.where(
@@ -571,7 +596,13 @@ class QuipExecutor:
             probe_keys = np.where(
                 p_present, morsel.values(l_attr), np.int64(-(2 ** 61))
             ).astype(np.int64)
-            p_idx, b_idx = multi_match(b_keys, probe_keys, impl=self.join_impl)
+            with (tr.span("kernel:multi_match", cat="kernel",
+                          node=node.node_id, impl=self.join_impl,
+                          build=len(b_keys), probe=len(probe_keys))
+                  if tr.enabled else NULL_SPAN):
+                p_idx, b_idx = multi_match(
+                    b_keys, probe_keys, impl=self.join_impl
+                )
             dt = time.perf_counter() - t0
             self.counters.join_tests += int(p_present.sum())
             self.stats.record_join(
@@ -664,6 +695,14 @@ class QuipExecutor:
         """One ρ pass: impute every missing predicate/projection attribute
         (selection attrs first — paper §5.3 Discussion), full-verify, then
         resolve padded join sides whose partner is complete; park the rest."""
+        tr = self.tracer
+        with (tr.span("op:rho", node=node.node_id, rows=rel.num_rows,
+                      final=final)
+              if tr.enabled else NULL_SPAN):
+            return self._rho_process_body(node, rel, final)
+
+    def _rho_process_body(self, node: RhoNode, rel: MaskedRelation, final: bool
+                          ) -> Optional[MaskedRelation]:
         rel = apply_filter_set(self, node, rel)
         if rel.num_rows == 0:
             return None
@@ -804,7 +843,12 @@ class QuipExecutor:
                 tids.update(st[m & (st >= 0)].tolist())
         if tids:
             arr = np.array(sorted(tids), dtype=np.int64)
-            values = self._request_values(t, attr, arr)
+            prov = self.provenance
+            if prov is not None:
+                with prov.at("rho_close", -1):
+                    values = self._request_values(t, attr, arr)
+            else:
+                values = self._request_values(t, attr, arr)
             owner = next(
                 (n for n in self.join_nodes
                  if attr in self.join_attrs[n.node_id]),
@@ -1084,7 +1128,12 @@ def execute_offline(
             if len(rows):
                 engine.enqueue(t, a, rel.tids[t][rows])
         clean[t] = rel
-    engine.flush()
+    prov = getattr(engine, "provenance", None)
+    if prov is not None:
+        with prov.at("offline", -1):
+            engine.flush()
+    else:
+        engine.flush()
     for t, rel in clean.items():
         for a in rel.column_names():
             rows = np.nonzero(rel.is_missing(a))[0]

@@ -35,7 +35,14 @@ __all__ = [
     "decide_groups",
     "full_verify",
     "group_rows_by_missing_pattern",
+    "op_kind",
 ]
+
+
+def op_kind(node: PlanNode) -> str:
+    """Short operator label for spans / provenance ("select", "join", …)."""
+    name = type(node).__name__
+    return name[:-4].lower() if name.endswith("Node") else name.lower()
 
 
 # --------------------------------------------------------------------------- #
@@ -133,16 +140,24 @@ def decide_groups(
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Split ``rows`` (attr missing) into (impute_rows, delay_rows) using the
     decision function per missing-pattern group."""
-    from repro.core.decision import decide_impute
+    from repro.core.decision import decide_impute_explain
 
     if len(rows) == 0:
         return rows, rows
+    prov = getattr(ex, "provenance", None)
     imp, dly = [], []
     for missing_attrs, grp in group_rows_by_missing_pattern(
         rel, rows, ex.query.predicate_attrs()
     ):
-        if decide_impute(node, attr, set(missing_attrs), ex.stats, ex.strategy,
-                         ex.obligated):
+        decision, costs, reason = decide_impute_explain(
+            node, attr, set(missing_attrs), ex.stats, ex.strategy,
+            ex.obligated)
+        if prov is not None:
+            prov.record_decision(
+                op_kind(node), node.node_id, attr,
+                tuple(sorted(missing_attrs)), len(grp), decision, costs,
+                reason)
+        if decision:
             imp.append(grp)
         else:
             dly.append(grp)

@@ -40,6 +40,7 @@ import numpy as np
 from repro.core.env import env_flag
 from repro.core.relation import MaskedRelation
 from repro.core.stats import ExecutionCounters, RuntimeStats
+from repro.obs.trace import NULL_SPAN, NULL_TRACER
 
 __all__ = ["Imputer", "ImputeStore", "ImputationService", "ImputationEngine"]
 
@@ -323,6 +324,8 @@ class ImputationService:
         batching: Optional[bool] = None,
         store: Optional[ImputeStore] = None,
         owner_id: int = 0,
+        tracer=None,
+        provenance=None,
     ):
         # with an injected (shared) store, all dense state lives there and
         # ``tables`` must be the store's registry for tids to line up
@@ -334,6 +337,11 @@ class ImputationService:
         self.stats = stats or RuntimeStats()
         self.counters = counters or ExecutionCounters()
         self.batching = _resolve_batching(batching)
+        # observability (repro.obs): the span tracer is never None (the
+        # shared NULL_TRACER is a zero-allocation no-op); the provenance
+        # recorder is None unless the serving layer asked for explain
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.provenance = provenance
         # request queue: (table, attr) -> list of enqueued tid arrays
         # (always per-service — only flushed results land in the store)
         self._queue: Dict[Tuple[str, str], List[np.ndarray]] = {}
@@ -404,30 +412,50 @@ class ImputationService:
         uniq = np.unique(tids)  # vectorized dedup (sorted, unique)
         hit_mask = filled[uniq]
         todo = uniq[~hit_mask]
+        hits = int(hit_mask.sum())
+        cross = 0
         owners = self.store.owners(table, attr)
-        if owners is not None and hit_mask.any():
+        if owners is not None and hits:
             # cells another query already paid for (serving telemetry)
-            hits = uniq[hit_mask]
-            cross = int((owners[hits] != self.owner_id).sum())
+            hit_tids = uniq[hit_mask]
+            cross = int((owners[hit_tids] != self.owner_id).sum())
             with self._tel_lock:
                 self.counters.impute_cross_hits += cross
         if len(todo) == 0:
+            if self.provenance is not None:
+                # fully-cached batch: still provenance (cross-hit telemetry
+                # and the explain report's requested/hit attribution)
+                self.provenance.on_flush(table, attr, requested, 0,
+                                         hits, cross, 0.0)
             return
-        model = self._model_for(table, attr)
-        t0 = time.perf_counter()
-        vals = np.asarray(
-            model.impute_attr(self.tables[table], attr, todo),
-            dtype=np.float64,
-        )
-        wall = time.perf_counter() - t0
-        sim = model.cost_per_value * len(todo)
+        tracer = self.tracer
+        span = tracer.span(
+            "impute_flush", cat="impute", table=table, attr=attr,
+            requested=requested,
+        ) if tracer.enabled else NULL_SPAN
+        with span:
+            model = self._model_for(table, attr)
+            t0 = time.perf_counter()
+            vals = np.asarray(
+                model.impute_attr(self.tables[table], attr, todo),
+                dtype=np.float64,
+            )
+            wall = time.perf_counter() - t0
+            sim = model.cost_per_value * len(todo)
+            span.set(computed=len(todo), cache_hits=hits)
         with self._tel_lock:
             self.simulated_seconds += sim
+            # the ONE place imputations increments — ProvenanceRecorder
+            # mirrors exactly this amount below, which is why the explain
+            # report reconciles with ExecutionCounters by construction
             self.counters.imputations += len(todo)
             self.counters.impute_batches += 1
             self.counters.imputation_seconds += wall + sim
             self.stats.record_imputation(attr, len(todo), wall + sim)
             self.stats.record_flush(attr, requested, len(todo))
+        if self.provenance is not None:
+            self.provenance.on_flush(table, attr, requested, len(todo),
+                                     hits, cross, wall + sim)
         self.store.fill(table, attr, todo, vals, self.owner_id)
 
     def flush(self) -> None:

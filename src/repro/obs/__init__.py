@@ -1,0 +1,35 @@
+"""Observability for the QUIP serving stack: spans, metrics, provenance.
+
+See docs/observability.md.  Gates: ``QUIP_TRACE`` / ``QUIP_TRACE_CLOCK``
+(span recording), ``QUIP_EXPLAIN`` (impute provenance); both off by
+default with a zero-allocation no-op path.
+"""
+
+from repro.obs.metrics import MetricsRegistry, build_service_metrics
+from repro.obs.provenance import (
+    ProvenanceRecorder,
+    render_explain,
+    resolve_explain,
+)
+from repro.obs.trace import (
+    NULL_SPAN,
+    NULL_TRACER,
+    Span,
+    TRACE_CLOCKS,
+    Tracer,
+    resolve_tracer,
+)
+
+__all__ = [
+    "MetricsRegistry",
+    "NULL_SPAN",
+    "NULL_TRACER",
+    "ProvenanceRecorder",
+    "Span",
+    "TRACE_CLOCKS",
+    "Tracer",
+    "build_service_metrics",
+    "render_explain",
+    "resolve_explain",
+    "resolve_tracer",
+]

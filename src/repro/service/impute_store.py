@@ -77,9 +77,13 @@ class SharedImputeStore(ImputeStore):
         stats: Optional[RuntimeStats] = None,
         counters: Optional[ExecutionCounters] = None,
         batching: Optional[bool] = None,
+        tracer=None,
+        provenance=None,
     ) -> ImputationService:
         """A fresh per-query service (own queue, counters, stats) backed by
-        this store's caches and models."""
+        this store's caches and models.  ``tracer``/``provenance`` ride on
+        the per-query service (spans and explain reports stay per-query
+        even though the cell caches are shared)."""
         return ImputationService(
             self.tables,
             default=default,
@@ -89,4 +93,6 @@ class SharedImputeStore(ImputeStore):
             batching=batching,
             store=self,
             owner_id=next(self._owner_ids),
+            tracer=tracer,
+            provenance=provenance,
         )

@@ -63,6 +63,7 @@ import math
 from collections import Counter, deque
 from typing import Deque, Dict, List, Optional
 
+from repro.obs.trace import NULL_TRACER
 from repro.service.session import RUNNING, QuerySession
 
 __all__ = ["MorselScheduler", "POLICIES", "COST_MODELS"]
@@ -137,6 +138,10 @@ class MorselScheduler:
         self._checked_out: set = set()
         self._out_by_tenant: Counter = Counter()
         self._edf_keys: Dict[int, tuple] = {}  # ticket -> (deadline, seq)
+        # observability: QuipService points this at its Tracer; scheduling
+        # decisions emit instants (admitted / checkout / checkin) so a
+        # trace shows *why* a morsel ran when it did
+        self.tracer = NULL_TRACER
 
     # ------------------------------------------------------------------ #
     # introspection
@@ -192,6 +197,11 @@ class MorselScheduler:
         rel = self._deadlines.get(session.tenant, self._default_deadline)
         if rel is not None:
             session.deadline = self.clock + float(rel)
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "admitted", cat="sched", ticket=session.ticket,
+                parent=session.trace_span, tenant=session.tenant,
+                clock=self.clock, deadline=session.deadline)
         self._nrun += 1
         self._run_by_tenant[session.tenant] += 1
         if self.policy == "rr":
@@ -254,6 +264,11 @@ class MorselScheduler:
         if session is not None:
             self._checked_out.add(session)
             self._out_by_tenant[session.tenant] += 1
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    "sched_checkout", cat="sched", ticket=session.ticket,
+                    parent=session.trace_span, tenant=session.tenant,
+                    policy=self.policy)
         return session
 
     def checkin(self, session: QuerySession, finished: bool) -> float:
@@ -262,6 +277,11 @@ class MorselScheduler:
         self._checked_out.discard(session)
         self._out_by_tenant[session.tenant] -= 1
         cost = self._charge(session, finished)
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "sched_checkin", cat="sched", ticket=session.ticket,
+                parent=session.trace_span, tenant=session.tenant,
+                cost=round(cost, 9), finished=finished)
         if self.policy == "rr":
             if not finished:
                 self._ring.append(session)

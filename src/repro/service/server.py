@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import json
 import threading
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional, Tuple
@@ -54,6 +55,13 @@ from repro.core.plan import Query
 from repro.core.relation import MaskedRelation
 from repro.core.stats import ExecutionCounters, QueryRecord, ServingStats
 from repro.imputers.base import ImputationService, Imputer
+from repro.obs import (
+    ProvenanceRecorder,
+    build_service_metrics,
+    render_explain,
+    resolve_explain,
+    resolve_tracer,
+)
 from repro.service.impute_store import SharedImputeStore, resolve_shared_impute
 from repro.service.plan_cache import PlanCache, query_signature
 from repro.service.registry import TableRegistry
@@ -62,7 +70,78 @@ from repro.service.scheduler import MorselScheduler
 from repro.service.session import DONE, FAILED, QUEUED, RUNNING, QuerySession
 from repro.service.workers import WorkerPool
 
-__all__ = ["QuipService"]
+__all__ = ["QuipService", "SUMMARY_KEYS", "expected_summary_keys"]
+
+
+# --------------------------------------------------------------------------- #
+# summary() schema — every key QuipService.summary() can emit, in one place.
+# tests/test_obs.py pins the schema against this via expected_summary_keys();
+# adding a key without documenting it here fails that test on purpose.
+# --------------------------------------------------------------------------- #
+SUMMARY_KEYS: Dict[str, str] = {
+    # -- ServingStats.summary() -------------------------------------------- #
+    "queries": "finished queries (failures included)",
+    "failed": "finished queries that failed",
+    "tenants": "distinct tenants across finished queries",
+    "morsel_steps": "scheduler-granted morsel steps",
+    "sched_cost": "total scheduler-charged cost (cost-model units)",
+    "p50_latency_s": "median submit-to-result latency (s)",
+    "p95_latency_s": "p95 submit-to-result latency (s)",
+    "queue_wait_s": "total submit-to-admission wait (s)",
+    "max_concurrent": "peak concurrently admitted sessions",
+    "admission_queued": "submissions that had to wait for a slot",
+    "queries_plan_cache_hit": "finished queries served a cached plan",
+    "queries_result_cache_hit": "finished queries served a cached answer",
+    "invalidation_events": "registry mutations observed",
+    "plans_invalidated": "plan-cache entries evicted by mutations",
+    "results_invalidated": "cached answers purged by mutations",
+    "store_cells_invalidated": "shared-store cells dropped by mutations",
+    "imputations": "cells actually imputed (model evaluations)",
+    "impute_batches": "deduplicated imputer invocations",
+    "impute_cross_hits": "cells served from another query's store fill",
+    "compiled_hits": "executions served by a compiled tensor plan",
+    "compile_fallbacks": "compiled dispatch that fell back to the interpreter",
+    # -- plan cache (LruCache.stats() + compiled artifacts) ---------------- #
+    "plan_cache_size": "cached plan signatures",
+    "plan_cache_hits": "plan-cache hits (unfinished queries included)",
+    "plan_cache_misses": "plan-cache misses",
+    "plan_cache_evictions": "plan-cache capacity evictions",
+    "plan_cache_invalidations": "plan-cache entries evicted by mutations",
+    "plan_cache_compiled": "live compiled artifacts on cached plans",
+    # -- service configuration / registry ---------------------------------- #
+    "exec_impl": "executor dispatch (interp | compiled)",
+    "registry_epoch": "registry global mutation epoch",
+    "shared_impute": "cross-query imputation sharing on (0/1)",
+    "scheduler_policy": "morsel scheduling policy (rr | wfq | deadline)",
+    "sched_clock": "scheduler cost clock (cost-model units)",
+    # -- conditional: result cache on (result_cache_size > 0) -------------- #
+    "result_cache_size": "cached answers (iff result cache enabled)",
+    "result_cache_hits": "result-cache hits (iff enabled)",
+    "result_cache_misses": "result-cache misses (iff enabled)",
+    "result_cache_evictions": "result-cache capacity evictions (iff enabled)",
+    "result_cache_invalidations": "cached answers purged (iff enabled)",
+    # -- conditional: shared impute store on ------------------------------- #
+    "store_filled_cells": "imputed cells resident in the shared store "
+                          "(iff shared_impute)",
+}
+
+_RESULT_CACHE_KEYS = (
+    "result_cache_size", "result_cache_hits", "result_cache_misses",
+    "result_cache_evictions", "result_cache_invalidations",
+)
+_STORE_KEYS = ("store_filled_cells",)
+
+
+def expected_summary_keys(*, result_cache: bool = True,
+                          shared_store: bool = False) -> set:
+    """The exact key set ``QuipService.summary()`` emits for a service
+    configured with/without the result cache and the shared impute store."""
+    keys = set(SUMMARY_KEYS)
+    if not result_cache:
+        keys -= set(_RESULT_CACHE_KEYS)
+    if not shared_store:
+        keys -= set(_STORE_KEYS)
+    return keys
 
 
 @dataclasses.dataclass
@@ -126,6 +205,8 @@ class QuipService:
         workers: int = 0,
         exec_impl: Optional[str] = None,
         compile_after_hits: int = 2,
+        tracer=None,
+        explain: Optional[bool] = None,
     ):
         assert max_inflight >= 1
         # compiled tensor plans (docs/compiled.md): with
@@ -166,6 +247,14 @@ class QuipService:
             default_deadline=default_deadline,
             cost_model=cost_model,
         )
+        # observability (docs/observability.md): tracer accepts a Tracer
+        # instance, a bool, or None (QUIP_TRACE env); disabled means the
+        # shared zero-allocation NULL_TRACER everywhere.  explain gates
+        # per-query impute provenance (QUIP_EXPLAIN env when None).
+        self.tracer = resolve_tracer(tracer)
+        self.scheduler.tracer = self.tracer
+        self.explain_enabled = resolve_explain(explain)
+        self._explains: Dict[int, Dict] = {}
         # per-tenant admission quota: at most N concurrently *admitted*
         # sessions per tenant (None = unlimited); the global max_inflight
         # still caps the total.  Quota-blocked sessions are skipped, not
@@ -211,20 +300,29 @@ class QuipService:
             # workers >= 1: N threads pull morsel steps via the scheduler's
             # checkout/checkin split; step() is disabled (it would race)
             self._pool = WorkerPool(self, workers)
+        # metric collectors close over live objects (incl. the pool), so
+        # build the registry last; it adds no bookkeeping of its own
+        self._metrics = build_service_metrics(self)
 
     # ------------------------------------------------------------------ #
     # per-query resources
     # ------------------------------------------------------------------ #
     def _make_engine(self, tables: Dict[str, MaskedRelation]
                      ) -> ImputationService:
+        # the engine carries the query's observability handles: executors
+        # read tracer/provenance off it (getattr), and _flush_key feeds
+        # the provenance recorder at the exact counter-increment site
+        prov = ProvenanceRecorder() if self.explain_enabled else None
         if self.store is not None:
-            return self.store.bind(self._factory, self._per_attr)
+            return self.store.bind(self._factory, self._per_attr,
+                                   tracer=self.tracer, provenance=prov)
         # isolation (safe default): a cold engine per query, exactly the
         # serial-replay construction — equivalence is trivial by design.
         # The engine only reads its tables, so it shares the session's
         # copies rather than paying a second copy per query.
         return ImputationService(
-            tables, default=self._factory, per_attr=self._per_attr
+            tables, default=self._factory, per_attr=self._per_attr,
+            tracer=self.tracer, provenance=prov,
         )
 
     # ------------------------------------------------------------------ #
@@ -326,6 +424,16 @@ class QuipService:
                         next(self._tickets), query, strategy, cached, tenant
                     )
                     self._sessions[session.ticket] = session
+                    if self.tracer.enabled:
+                        session.trace_span = self.tracer.begin(
+                            "query", cat="query", ticket=session.ticket,
+                            tenant=tenant, strategy=strategy,
+                            result_cache_hit=True)
+                    if self.explain_enabled:
+                        self._explains[session.ticket] = {
+                            "ticket": session.ticket, "strategy": strategy,
+                            "result_cache_hit": True,
+                        }
                     self._finalize(session)
                     return session.ticket
             session = QuerySession(
@@ -337,6 +445,13 @@ class QuipService:
                 exec_kwargs=self._exec_kwargs,
             )
             self._sessions[session.ticket] = session
+            session.tracer = self.tracer
+            if self.tracer.enabled:
+                session.trace_span = self.tracer.begin(
+                    "query", cat="query", ticket=session.ticket,
+                    tenant=tenant, strategy=strategy,
+                    policy=self.scheduler.policy, exec_impl=self.exec_impl,
+                    epoch=self.registry.global_epoch)
             self._waiting.append(session)
             self._admit()
             if session.state == QUEUED:  # ring full or quota exhausted
@@ -508,6 +623,7 @@ class QuipService:
             f"release of unfinished ticket {ticket} ({session.state})"
         )
         del self._sessions[ticket]
+        self._explains.pop(ticket, None)
 
     # ------------------------------------------------------------------ #
     # compound (§9.3) queries — routed through sessions
@@ -693,6 +809,22 @@ class QuipService:
                 dataclasses.replace(session.engine.counters)
                 if session.engine is not None else ExecutionCounters()
             )
+        # harvest impute provenance before release_resources drops the
+        # engine; the report reconciles with the recorded counters exactly
+        # (on_flush mirrors every counters.imputations increment)
+        if (self.explain_enabled and session.engine is not None
+                and getattr(session.engine, "provenance", None) is not None):
+            report = session.engine.provenance.report()
+            report["ticket"] = session.ticket
+            report["strategy"] = session.strategy
+            report["failed"] = session.state == FAILED
+            report["counters_imputations"] = counters.imputations
+            self._explains[session.ticket] = report
+        if session.trace_span is not None:
+            self.tracer.end(session.trace_span, state=session.state,
+                            steps=session.steps_taken,
+                            sched_cost=round(session.sched_cost, 9))
+            session.trace_span = None
         self.serving.record_query(QueryRecord(
             ticket=session.ticket,
             tenant=session.tenant,
@@ -796,3 +928,66 @@ class QuipService:
         (see :meth:`ServingStats.tenant_summary`)."""
         with self._lock:
             return self.serving.tenant_summary()
+
+    # ------------------------------------------------------------------ #
+    # observability: metrics / explain / trace export
+    # ------------------------------------------------------------------ #
+    def metrics(self, fmt: str = "json"):
+        """Metrics snapshot over the live serving state (no duplicate
+        bookkeeping — collectors read the same objects ``summary()``
+        folds).  ``fmt="json"`` returns the nested dict,
+        ``fmt="prometheus"`` the text exposition format.  Collected under
+        the service lock, so one call is internally consistent."""
+        with self._lock:
+            if fmt == "json":
+                return self._metrics.snapshot()
+            if fmt == "prometheus":
+                return self._metrics.prometheus()
+            raise ValueError(
+                f"unknown metrics format {fmt!r} "
+                f"(expected 'json' or 'prometheus')"
+            )
+
+    def explain(self, ticket: int) -> Dict:
+        """The impute-provenance report of a finished ticket: decision-
+        function log, per-operator imputation sites, and totals that
+        reconcile exactly with the query's recorded counters.  Requires
+        ``explain=True`` (or ``QUIP_EXPLAIN``) at construction; compound
+        tickets return ``{"compound": kind, "branches": [...]}``.  The
+        report is dropped with :meth:`release`."""
+        with self._lock:
+            if not self.explain_enabled:
+                raise RuntimeError(
+                    "explain is disabled — construct QuipService with "
+                    "explain=True (or set QUIP_EXPLAIN=1)"
+                )
+            comp = self._compounds.get(ticket)
+            if comp is not None:
+                return {
+                    "ticket": ticket,
+                    "compound": comp.kind,
+                    "branches": [self._explains[t] for t in comp.tickets],
+                }
+            return self._explains[ticket]
+
+    def explain_text(self, ticket: int) -> str:
+        """:meth:`explain` rendered as a human-readable report."""
+        report = self.explain(ticket)
+        if "compound" in report:
+            parts = [f"explain ticket={ticket} "
+                     f"compound={report['compound']}"]
+            parts.extend(render_explain(b) for b in report["branches"])
+            return "\n".join(parts)
+        return render_explain(report)
+
+    def export_trace(self, path: Optional[str] = None,
+                     ticket: Optional[int] = None) -> Dict:
+        """The recorded spans as a Chrome trace-event document (load in
+        Perfetto / chrome://tracing).  ``ticket`` filters to one query;
+        ``path`` also writes the JSON to disk.  Returns the document."""
+        with self._lock:
+            doc = self.tracer.chrome_trace(ticket=ticket)
+        if path is not None:
+            with open(path, "w") as fh:
+                json.dump(doc, fh, indent=1, default=str)
+        return doc

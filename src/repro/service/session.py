@@ -29,6 +29,7 @@ from repro.core.executor import (
 from repro.core.plan import PlanNode, Query
 from repro.core.relation import MaskedRelation
 from repro.imputers.base import ImputationService
+from repro.obs.trace import NULL_SPAN, NULL_TRACER
 
 __all__ = ["QuerySession", "QUEUED", "RUNNING", "DONE", "FAILED"]
 
@@ -71,6 +72,11 @@ class QuerySession:
         # service/workers.py); both are set by QuipService._admit
         self.defer_setup = False
         self.task_runner = None
+        # observability: the service points these at its Tracer and the
+        # query-lifetime span id (begin/end — cross-thread safe); the
+        # defaults keep standalone sessions zero-overhead
+        self.tracer = NULL_TRACER
+        self.trace_span: Optional[int] = None
         # set at admission: where a DONE result may be inserted in the
         # ResultCache (captures the table epochs the execution observed)
         self.result_key: Optional[Tuple] = None
@@ -140,6 +146,16 @@ class QuerySession:
             self._materialize()
 
     def _materialize(self) -> None:
+        tr = self.tracer
+        with (tr.span("session_setup", cat="sched", ticket=self.ticket,
+                      parent=self.trace_span)
+              if tr.enabled else NULL_SPAN) as sp:
+            self._materialize_body()
+            if tr.enabled:
+                sp.set(plan_cache_hit=self.plan_cache_hit,
+                       state=self.state)
+
+    def _materialize_body(self) -> None:
         try:
             (self.plan, self.engine, self.tables,
              self.plan_cache_hit, self.result_key) = self._setup()
@@ -184,31 +200,39 @@ class QuerySession:
         ρ-fixpoint morsel 50× a 1 ms scan morsel instead of one ticket."""
         if self.state != RUNNING:
             return True
-        if self._gen is None:  # deferred setup: first step materializes
-            self._materialize()
-            if self.state != RUNNING:
-                return True
-        sim0 = self.engine.simulated_seconds if self.engine is not None else 0.0
-        t0 = time.perf_counter()
-        try:
-            next(self._gen)
-            finished = False
-        except StopIteration:
-            if self.result is None:
-                self.result = self._executor.result
-            self.state = DONE
-            self.finished_at = time.perf_counter()
-            finished = True
-        except Exception as e:  # query errors surface via result();
-            self._fail(e)       # KeyboardInterrupt/SystemExit propagate
-            finished = True
-        wall = time.perf_counter() - t0
-        sim = (self.engine.simulated_seconds
-               if self.engine is not None else 0.0) - sim0
-        self.last_step_wall_s = wall
-        self.last_step_sim_s = sim
-        self.steps_taken += 1
-        self.active_s += wall + sim
+        tr = self.tracer
+        with (tr.span("morsel_step", cat="sched", ticket=self.ticket,
+                      parent=self.trace_span, step=self.steps_taken)
+              if tr.enabled else NULL_SPAN) as sp:
+            if self._gen is None:  # deferred setup: first step materializes
+                self._materialize()
+                if self.state != RUNNING:
+                    sp.set(state=self.state)
+                    return True
+            sim0 = (self.engine.simulated_seconds
+                    if self.engine is not None else 0.0)
+            t0 = time.perf_counter()
+            try:
+                next(self._gen)
+                finished = False
+            except StopIteration:
+                if self.result is None:
+                    self.result = self._executor.result
+                self.state = DONE
+                self.finished_at = time.perf_counter()
+                finished = True
+            except Exception as e:  # query errors surface via result();
+                self._fail(e)       # KeyboardInterrupt/SystemExit propagate
+                finished = True
+            wall = time.perf_counter() - t0
+            sim = (self.engine.simulated_seconds
+                   if self.engine is not None else 0.0) - sim0
+            self.last_step_wall_s = wall
+            self.last_step_sim_s = sim
+            self.steps_taken += 1
+            self.active_s += wall + sim
+            if tr.enabled:
+                sp.set(finished=finished, state=self.state)
         return finished
 
     def cancel(self, error: BaseException) -> None:

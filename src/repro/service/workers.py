@@ -83,6 +83,8 @@ class WorkerPool:
         self.size = int(size)
         self._groups: Deque[_TaskGroup] = deque()
         self._busy = 0  # workers currently stepping a session / unit
+        self.steps_done = 0  # session steps run by the pool (under cv)
+        self.units_done = 0  # fan-out units run by the pool (under cv)
         self._stop = False
         self._crash: Optional[BaseException] = None
         self._threads = [
@@ -121,6 +123,10 @@ class WorkerPool:
                 finally:
                     with self._cv:
                         self._busy -= 1
+                        if unit is not None:
+                            self.units_done += 1
+                        else:
+                            self.steps_done += 1
                         self._cv.notify_all()
         except BaseException as e:  # pool bug: surface, don't hang callers
             with self._cv:
@@ -189,6 +195,14 @@ class WorkerPool:
     # ------------------------------------------------------------------ #
     # caller-side synchronization
     # ------------------------------------------------------------------ #
+    @property
+    def busy(self) -> int:
+        """Workers currently stepping a session or running a fan-out
+        unit.  A point-in-time gauge for the metrics layer; the cv uses
+        the service RLock, so reading under it from a metrics snapshot
+        is re-entrant-safe."""
+        return self._busy
+
     def check(self) -> None:
         """Raise if a worker thread crashed (call under the cv)."""
         if self._crash is not None:

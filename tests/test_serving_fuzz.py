@@ -19,12 +19,12 @@ matrix, longer op streams) is behind ``@pytest.mark.slow`` (``--runslow``).
 
 from __future__ import annotations
 
-import os
 from collections import Counter
 
 import numpy as np
 import pytest
 
+from repro.core.env import env_int
 from repro.core.executor import execute_offline, execute_quip
 from repro.core.plan import Aggregate, Query
 from repro.core.predicates import JoinPredicate, SelectionPredicate
@@ -37,7 +37,9 @@ STATES = {"queued", "running", "done", "failed"}
 MORSEL_ROWS = 8
 
 # extra seed injected by CI / a repro run: QUIP_FUZZ_SEED=123
-_ENV_SEED = os.environ.get("QUIP_FUZZ_SEED")
+# (env_int fails loud on a typo'd seed instead of silently fuzzing
+# the default sweep)
+_ENV_SEED = env_int("QUIP_FUZZ_SEED")
 
 
 def _rand_query(rng: np.random.Generator) -> Query:
@@ -190,7 +192,7 @@ def test_serving_fuzz_result_cache_off():
 # --------------------------------------------------------------------------- #
 _DEEP_SEEDS = list(range(2, 8))
 if _ENV_SEED is not None:
-    _DEEP_SEEDS = [int(_ENV_SEED)] + _DEEP_SEEDS
+    _DEEP_SEEDS = [_ENV_SEED] + _DEEP_SEEDS
 
 
 @pytest.mark.slow
