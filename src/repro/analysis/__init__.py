@@ -1,0 +1,45 @@
+"""Static invariant lints + runtime sanitizers for the QUIP tree.
+
+Two halves (docs/analysis.md):
+
+* **quiplint** (:mod:`repro.analysis.lint`, ``python -m repro.analysis``)
+  — AST passes enforcing the conventions the serving stack's correctness
+  rests on: env-discipline (every ``QUIP_*`` read goes through
+  ``core.env`` against :data:`repro.core.env.ENV_REGISTRY`),
+  counter-discipline (``counters.<field> +=`` sites the provenance
+  recorder mirrors), lock-discipline (``# guarded-by:`` annotations),
+  span-discipline (tracer begin/end pairing), and kernel-triple parity
+  (numpy/ref/Pallas + env knob per op).  Exit nonzero on findings.
+* **lockcheck** (:mod:`repro.analysis.lockcheck`) — the
+  ``QUIP_SANITIZE=locks`` runtime lock-order sanitizer; drop-in lock
+  factories recording a global acquisition-order graph with cycle
+  detection (potential-deadlock reports) plus contention telemetry.
+
+This package stays import-light: lock sites across the tree import the
+factories below at module import time, so nothing here may pull in the
+executor/serving stack.
+"""
+
+from repro.analysis.lockcheck import (
+    LockOrderGraph,
+    assert_acyclic,
+    graph,
+    make_condition,
+    make_lock,
+    make_rlock,
+    report,
+    reset,
+    resolve_sanitize,
+)
+
+__all__ = [
+    "LockOrderGraph",
+    "assert_acyclic",
+    "graph",
+    "make_condition",
+    "make_lock",
+    "make_rlock",
+    "report",
+    "reset",
+    "resolve_sanitize",
+]

@@ -10,10 +10,9 @@ missing counter is zero (paper §4, last paragraph).
 
 from __future__ import annotations
 
-import threading
-
 import numpy as np
 
+from repro.analysis.lockcheck import make_lock
 from repro.kernels import ops as kops
 from repro.kernels.hashing import fold64, hash_positions_np
 
@@ -25,13 +24,13 @@ class BloomFilter:
         self.attr = attr
         self.log2m = int(log2m)
         self.num_hashes = int(num_hashes)
-        self.bits = np.zeros((1 << self.log2m) // 32, dtype=np.uint32)
-        self.n_inserted = 0
-        self.complete = False  # BFC(attr)
+        self.bits = np.zeros((1 << self.log2m) // 32, dtype=np.uint32)  # guarded-by: _lock
+        self.n_inserted = 0  # guarded-by: _lock
+        self.complete = False  # BFC(attr)  # guarded-by: _lock
         # ``np.bitwise_or.at`` is a read-modify-write over shared words;
         # concurrent inserts from sibling parallel morsels would lose bits
         # (→ false negatives → wrong pruning), so inserts serialize
-        self._lock = threading.Lock()
+        self._lock = make_lock("BloomFilter._lock")
 
     # ------------------------------------------------------------------ #
     def insert(self, keys: np.ndarray) -> None:
@@ -59,7 +58,9 @@ class BloomFilter:
         return np.asarray(out)
 
     def mark_complete(self) -> None:
-        self.complete = True
+        # monotonic bool flip by the owning executor thread; readers
+        # tolerate a stale False (one extra probe), never a wrong True
+        self.complete = True  # unguarded: monotonic flip, single writer
 
     def __repr__(self):
         return (

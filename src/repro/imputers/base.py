@@ -37,6 +37,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.analysis.lockcheck import make_lock
 from repro.core.env import env_flag
 from repro.core.relation import MaskedRelation
 from repro.core.stats import ExecutionCounters, RuntimeStats
@@ -86,10 +87,14 @@ class _KeyLock:
     __slots__ = ("_lock", "_owner")
 
     def __init__(self):
-        self._lock = threading.Lock()
-        self._owner: Optional[int] = None
+        # every (table, attr) key lock shares one sanitizer node: the
+        # acquisition *order* discipline is per-class, not per-instance
+        self._lock = make_lock("ImputeStore.key")
+        # reentrancy tattle only; reads race benignly (a stale non-match
+        # just proceeds to the blocking acquire)
+        self._owner: Optional[int] = None  # guarded-by: _lock
 
-    def __enter__(self) -> "_KeyLock":
+    def __enter__(self) -> "_KeyLock":  # requires: _lock
         me = threading.get_ident()
         if self._owner == me:
             raise RuntimeError(
@@ -100,7 +105,7 @@ class _KeyLock:
         self._owner = me
         return self
 
-    def __exit__(self, *exc) -> None:
+    def __exit__(self, *exc) -> None:  # requires: _lock
         self._owner = None
         self._lock.release()
 
@@ -133,18 +138,20 @@ class ImputeStore:
                  track_owners: bool = False):
         self.tables = tables
         self.track_owners = bool(track_owners)
-        self._values: Dict[Tuple[str, str], np.ndarray] = {}
-        self._filled: Dict[Tuple[str, str], np.ndarray] = {}
-        self._owner: Dict[Tuple[str, str], np.ndarray] = {}
-        self._models: Dict[Tuple[str, str], Imputer] = {}
-        self._fitted: set = set()
+        # dict *shape* mutates under the meta lock; the element writes of
+        # one column happen under that key's flush lock (``fill``)
+        self._values: Dict[Tuple[str, str], np.ndarray] = {}  # guarded-by: _meta_lock|flush_lock
+        self._filled: Dict[Tuple[str, str], np.ndarray] = {}  # guarded-by: _meta_lock|flush_lock
+        self._owner: Dict[Tuple[str, str], np.ndarray] = {}  # guarded-by: _meta_lock|flush_lock
+        self._models: Dict[Tuple[str, str], Imputer] = {}  # guarded-by: _meta_lock
+        self._fitted: set = set()  # guarded-by: _meta_lock
         # registry metadata guard: dict/set mutation only, never held
         # across model fits or imputations
-        self._meta_lock = threading.Lock()
+        self._meta_lock = make_lock("ImputeStore._meta_lock")
         # store-wide multi-key flush serialization + reentrancy detection
-        self._flush_serial = threading.Lock()
-        self._flush_owner: Optional[int] = None
-        self._key_locks: Dict[Tuple[str, str], _KeyLock] = {}
+        self._flush_serial = make_lock("ImputeStore._flush_serial")
+        self._flush_owner: Optional[int] = None  # guarded-by: _flush_serial
+        self._key_locks: Dict[Tuple[str, str], _KeyLock] = {}  # guarded-by: _meta_lock
 
     # -- column caches ----------------------------------------------------#
     def column_cache(self, table: str, attr: str
@@ -166,7 +173,7 @@ class ImputeStore:
         return self._owner.get((table, attr))
 
     def fill(self, table: str, attr: str, tids: np.ndarray,
-             values: np.ndarray, owner_id: int) -> None:
+             values: np.ndarray, owner_id: int) -> None:  # requires: flush_lock
         vals, filled = self.column_cache(table, attr)
         vals[tids] = values
         filled[tids] = True
@@ -232,7 +239,7 @@ class ImputeStore:
         with self._meta_lock:
             return self._key_locks.setdefault(key, _KeyLock())
 
-    def begin_flush(self) -> None:
+    def begin_flush(self) -> None:  # requires: _flush_serial
         """Serialize a store-wide (multi-key) flush.  A concurrent flush
         from another thread blocks; a *reentrant* flush on the same thread
         (an imputer calling ``flush`` from inside ``impute_attr``) raises
@@ -247,7 +254,7 @@ class ImputeStore:
         self._flush_serial.acquire()
         self._flush_owner = me
 
-    def end_flush(self) -> None:
+    def end_flush(self) -> None:  # requires: _flush_serial
         self._flush_owner = None
         self._flush_serial.release()
 
@@ -335,7 +342,7 @@ class ImputationService:
         self._default = default
         self._per_attr = dict(per_attr or {})
         self.stats = stats or RuntimeStats()
-        self.counters = counters or ExecutionCounters()
+        self.counters = counters or ExecutionCounters()  # guarded-by: _tel_lock
         self.batching = _resolve_batching(batching)
         # observability (repro.obs): the span tracer is never None (the
         # shared NULL_TRACER is a zero-allocation no-op); the provenance
@@ -344,13 +351,13 @@ class ImputationService:
         self.provenance = provenance
         # request queue: (table, attr) -> list of enqueued tid arrays
         # (always per-service — only flushed results land in the store)
-        self._queue: Dict[Tuple[str, str], List[np.ndarray]] = {}
-        self.simulated_seconds: float = 0.0
+        self._queue: Dict[Tuple[str, str], List[np.ndarray]] = {}  # guarded-by: _qlock
+        self.simulated_seconds: float = 0.0  # guarded-by: _tel_lock
         # queue swap guard + telemetry guard: intra-query parallel morsels
         # share this service, and lost counter updates would corrupt the
         # imputations/flushes accounting the benchmarks assert on
-        self._qlock = threading.Lock()
-        self._tel_lock = threading.Lock()
+        self._qlock = make_lock("ImputationService._qlock")
+        self._tel_lock = make_lock("ImputationService._tel_lock")
 
     # ------------------------------------------------------------------ #
     def _model_for(self, table: str, attr: str) -> Imputer:

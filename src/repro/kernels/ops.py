@@ -1,12 +1,17 @@
 """Jit'd public wrappers for the Pallas kernels with implementation dispatch.
 
 ``impl``:
+  * ``"numpy"``   — pure-host port (no device round-trip; exact keys for
+                    the join, float32 math for the distance).
   * ``"ref"``     — pure-jnp oracle (fast XLA path on CPU; default here).
   * ``"pallas"``  — the Pallas kernel.  On this CPU-only container it runs in
                     interpret mode; on TPU it compiles to Mosaic.
 
-The default is chosen per-backend: Pallas on TPU, ref on CPU (interpret-mode
-Pallas is a correctness tool, not a performance path).
+Every public op resolves ``impl`` through a ``resolve_*_impl`` knob
+(``QUIP_<OP>_IMPL`` env) or forwards it to one that does — the quiplint
+kernel-parity pass (``python -m repro.analysis``) enforces this triple.
+The unset default is chosen per-backend: Pallas on TPU, ref on CPU
+(interpret-mode Pallas is a correctness tool, not a performance path).
 """
 
 from __future__ import annotations
@@ -26,7 +31,7 @@ from repro.kernels.hash_join import (
     hash_join_probe_pallas,
     table_log2cap,
 )
-from repro.kernels.hashing import fold64
+from repro.kernels.hashing import MULTIPLIERS, OFFSETS, fold64
 from repro.kernels.knn_distance import masked_distance_pallas
 from repro.kernels.neighbor_agg import neighbor_mean_pallas, neighbor_mode_pallas
 from repro.kernels.segment_ops import segment_reduce_pallas
@@ -39,6 +44,9 @@ __all__ = [
     "neighbor_aggregate",
     "segment_reduce",
     "default_impl",
+    "resolve_bloom_impl",
+    "resolve_dist_impl",
+    "resolve_join_impl",
     "resolve_knn_impl",
     "resolve_segment_impl",
 ]
@@ -52,6 +60,48 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+_HOST_IMPLS = ("numpy", "ref", "pallas")
+
+
+def resolve_bloom_impl(impl: Optional[str] = None) -> str:
+    """Bloom-probe dispatch: explicit ``impl`` > ``QUIP_BLOOM_IMPL`` env >
+    the backend default (Pallas on TPU, ref elsewhere).  A *set* env value
+    is validated against numpy/ref/pallas; unset falls through to the
+    backend choice."""
+    if impl is not None:
+        if impl not in _HOST_IMPLS:
+            raise ValueError(f"unknown bloom impl {impl!r}")
+        return impl
+    impl = env_choice("QUIP_BLOOM_IMPL", _HOST_IMPLS, "auto")
+    return default_impl() if impl == "auto" else impl
+
+
+def resolve_dist_impl(impl: Optional[str] = None) -> str:
+    """Masked-distance dispatch: explicit ``impl`` > ``QUIP_DIST_IMPL`` env
+    > the backend default (Pallas on TPU, ref elsewhere)."""
+    if impl is not None:
+        if impl not in _HOST_IMPLS:
+            raise ValueError(f"unknown distance impl {impl!r}")
+        return impl
+    impl = env_choice("QUIP_DIST_IMPL", _HOST_IMPLS, "auto")
+    return default_impl() if impl == "auto" else impl
+
+
+def resolve_join_impl(impl: Optional[str] = None) -> str:
+    """Kernel-level join dispatch: explicit ``impl`` > ``QUIP_JOIN_IMPL``
+    env > the backend default.  Distinct from the *engine-level*
+    ``core.triggers.resolve_join_impl``, whose unset default is the NumPy
+    oracle (``multi_match``) and never reaches this module; an explicit
+    ``QUIP_JOIN_IMPL=ref|pallas`` routes the engine here, where the same
+    knob then picks the kernel path."""
+    if impl is not None:
+        if impl not in _HOST_IMPLS:
+            raise ValueError(f"unknown join impl {impl!r}")
+        return impl
+    impl = env_choice("QUIP_JOIN_IMPL", _HOST_IMPLS, "auto")
+    return default_impl() if impl == "auto" else impl
+
+
 def bloom_probe(
     bits: jnp.ndarray,
     folded: jnp.ndarray,
@@ -61,7 +111,19 @@ def bloom_probe(
     impl: Optional[str] = None,
 ) -> jnp.ndarray:
     """``folded``: uint32 host-folded keys (see ``hashing.fold64``)."""
-    impl = impl or default_impl()
+    impl = resolve_bloom_impl(impl)
+    if impl == "numpy":
+        # host multiply-shift probe — same uint32 wraparound math as
+        # hashing.hash_positions_np, but over pre-folded keys
+        bits_np = np.asarray(bits, dtype=np.uint32)
+        f = np.asarray(folded, dtype=np.uint32)[:, None]
+        pos = ((f * MULTIPLIERS[None, :num_hashes]
+                + OFFSETS[None, :num_hashes])
+               >> np.uint32(32 - log2m)).astype(np.uint32)
+        word = (pos >> np.uint32(5)).astype(np.int64)
+        bit = pos & np.uint32(31)
+        hit = (bits_np[word] >> bit) & np.uint32(1)
+        return np.all(hit == 1, axis=1)
     if impl == "pallas":
         return bloom_probe_pallas(
             bits, folded, num_hashes=num_hashes, log2m=log2m, interpret=_interpret()
@@ -92,14 +154,17 @@ def hash_join_match(
     Keys are folded to uint32 for the device (``hashing.fold64``); the
     kernels emit fold-level *candidates* (counts + fixed-size match blocks)
     which are verified here against the original 64-bit keys, so fold
-    collisions never produce wrong pairs.
+    collisions never produce wrong pairs.  ``impl="numpy"`` sort-joins on
+    the original int64 keys directly (no folding, no verification pass).
     """
-    impl = impl or default_impl()
+    impl = resolve_join_impl(impl)
     b = np.ascontiguousarray(np.asarray(build_keys, dtype=np.int64))
     p = np.ascontiguousarray(np.asarray(probe_keys, dtype=np.int64))
     if len(b) == 0 or len(p) == 0:
         z = np.zeros(0, dtype=np.int64)
         return z, z
+    if impl == "numpy":
+        return _hash_join_numpy(b, p)
     fb = fold64(b)
     fp = fold64(p)
     # static fold-level duplication bound (columns of the match block)
@@ -152,6 +217,29 @@ def hash_join_match(
 _DENSE_BUDGET = 1 << 24  # match-block entries per probe chunk (64 MiB int32)
 
 
+def _hash_join_numpy(b: np.ndarray, p: np.ndarray
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """Host sort-join on exact int64 keys: probe-major pairs, ascending
+    build index within a probe (the stable argsort keeps equal keys in
+    original order) — bit-identical to ``core.triggers.multi_match``."""
+    order = np.argsort(b, kind="stable")
+    sb = b[order]
+    lo = np.searchsorted(sb, p, side="left")
+    hi = np.searchsorted(sb, p, side="right")
+    counts = hi - lo
+    total = int(counts.sum())
+    if total == 0:
+        z = np.zeros(0, dtype=np.int64)
+        return z, z
+    probe_idx = np.repeat(np.arange(len(p), dtype=np.int64), counts)
+    starts = np.repeat(lo, counts)
+    offs = np.arange(total, dtype=np.int64) - np.repeat(
+        np.cumsum(counts) - counts, counts
+    )
+    build_idx = order[starts + offs].astype(np.int64)
+    return probe_idx, build_idx
+
+
 def masked_distance(
     q: jnp.ndarray,
     qm: jnp.ndarray,
@@ -160,10 +248,27 @@ def masked_distance(
     *,
     impl: Optional[str] = None,
 ) -> jnp.ndarray:
-    impl = impl or default_impl()
+    impl = resolve_dist_impl(impl)
+    if impl == "numpy":
+        return _masked_distance_numpy(q, qm, r, rm)
     if impl == "pallas":
         return masked_distance_pallas(q, qm, r, rm, interpret=_interpret())
     return _dist_ref_jit(q, qm, r, rm)
+
+
+def _masked_distance_numpy(q, qm, r, rm) -> np.ndarray:
+    """float32 host port of ``ref.masked_distance_ref`` (same compute
+    dtype, so the three impls agree to the kernel tests' tolerance)."""
+    qm = np.asarray(qm, dtype=np.float32)
+    rm = np.asarray(rm, dtype=np.float32)
+    q = np.asarray(q, dtype=np.float32) * qm
+    r = np.asarray(r, dtype=np.float32) * rm
+    sq = (q * q) @ rm.T + qm @ (r * r).T - 2.0 * (q @ r.T)
+    n_co = qm @ rm.T
+    d = np.float32(q.shape[1])
+    scaled = np.where(n_co > 0, sq * (d / np.maximum(n_co, np.float32(1.0))),
+                      np.float32(np.inf))
+    return np.maximum(scaled, np.float32(0.0))
 
 
 _dist_ref_jit = jax.jit(_ref.masked_distance_ref)
@@ -179,11 +284,8 @@ def masked_knn(
     impl: Optional[str] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     dmat = masked_distance(q, qm, r, rm, impl=impl)
-    neg, idx = jax.lax.top_k(-dmat, k)
+    neg, idx = jax.lax.top_k(-jnp.asarray(dmat), k)
     return -neg, idx
-
-
-_HOST_IMPLS = ("numpy", "ref", "pallas")
 
 
 def resolve_knn_impl(impl: Optional[str] = None) -> str:

@@ -1,8 +1,11 @@
 import os
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS", "")
-)
+# idempotent: re-import (or hillclimb importing this module) must not
+# stack the flag — jax locks the device count on first init anyway
+_HOST_DEVICES_FLAG = "--xla_force_host_platform_device_count=512"
+if _HOST_DEVICES_FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        _HOST_DEVICES_FLAG + " " + os.environ.get("XLA_FLAGS", "")
+    )
 
 """Multi-pod dry-run: ``.lower().compile()`` every (arch × shape × mesh) cell.
 

@@ -1,8 +1,11 @@
 import os
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS", "")
-)
+# idempotent: importing both launch modules (hillclimb imports dryrun)
+# must not stack the flag — jax locks the device count on first init
+_HOST_DEVICES_FLAG = "--xla_force_host_platform_device_count=512"
+if _HOST_DEVICES_FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        _HOST_DEVICES_FLAG + " " + os.environ.get("XLA_FLAGS", "")
+    )
 
 """§Perf hillclimb driver: compile a cell under named config variants and
 report the three roofline terms per variant (hypothesis → change → measure).

@@ -30,6 +30,7 @@ import threading
 from contextlib import contextmanager
 from typing import Dict, List, Optional, Tuple
 
+from repro.analysis.lockcheck import make_lock
 from repro.core.env import env_flag
 
 __all__ = ["ProvenanceRecorder", "render_explain", "resolve_explain"]
@@ -52,11 +53,11 @@ class ProvenanceRecorder:
     """Per-query impute-provenance accumulator (one per engine)."""
 
     def __init__(self):
-        self._lock = threading.Lock()
+        self._lock = make_lock("ProvenanceRecorder._lock")
         self._tls = threading.local()
-        self.decisions: List[Dict] = []
+        self.decisions: List[Dict] = []  # guarded-by: _lock
         # (op, node_id, table, attr) -> accumulated site telemetry
-        self.sites: Dict[Tuple[str, int, str, str], Dict] = {}
+        self.sites: Dict[Tuple[str, int, str, str], Dict] = {}  # guarded-by: _lock
 
     # -- operator context --------------------------------------------------#
     @contextmanager

@@ -34,6 +34,7 @@ import time
 from collections import Counter
 from typing import Dict, List, Optional
 
+from repro.analysis.lockcheck import make_lock
 from repro.core.env import env_choice, env_flag
 
 __all__ = [
@@ -129,11 +130,11 @@ class Tracer:
                              f"expected one of {TRACE_CLOCKS}")
         self.enabled = bool(enabled)
         self.clock = clock
-        self._lock = threading.Lock()
-        self._records: List[Span] = []
-        self._open: Dict[int, Span] = {}  # begin()/end() cross-thread spans
-        self._next_id = 0
-        self._tick = 0
+        self._lock = make_lock("Tracer._lock")
+        self._records: List[Span] = []  # guarded-by: _lock
+        self._open: Dict[int, Span] = {}  # guarded-by: _lock
+        self._next_id = 0  # guarded-by: _lock
+        self._tick = 0  # guarded-by: _lock
         self._origin = time.perf_counter()
         self._tls = threading.local()
 

@@ -34,10 +34,10 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import json
-import threading
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional, Tuple
 
+from repro.analysis.lockcheck import make_condition, make_rlock
 from repro.core.compiled import (
     CompiledPlan,
     CompileFallback,
@@ -254,7 +254,7 @@ class QuipService:
         self.tracer = resolve_tracer(tracer)
         self.scheduler.tracer = self.tracer
         self.explain_enabled = resolve_explain(explain)
-        self._explains: Dict[int, Dict] = {}
+        self._explains: Dict[int, Dict] = {}  # guarded-by: _lock|_cv
         # per-tenant admission quota: at most N concurrently *admitted*
         # sessions per tenant (None = unlimited); the global max_inflight
         # still caps the total.  Quota-blocked sessions are skipped, not
@@ -272,7 +272,7 @@ class QuipService:
             )
         self._tenant_quotas = dict(tenant_quotas or {})
         self._default_tenant_quota = default_tenant_quota
-        self.serving = ServingStats()
+        self.serving = ServingStats()  # guarded-by: _lock|_cv
         self._exec_kwargs = {
             "morsel_rows": morsel_rows,
             "bloom_impl": bloom_impl,
@@ -281,19 +281,21 @@ class QuipService:
             "use_vf": use_vf,
         }
         self._tickets = itertools.count(1)
-        self._sessions: Dict[int, QuerySession] = {}
-        self._waiting: Deque[QuerySession] = deque()
-        self._compounds: Dict[int, _Compound] = {}
-        self._pending_compounds: set = set()  # unresolved tickets (step scan)
+        self._sessions: Dict[int, QuerySession] = {}  # guarded-by: _lock|_cv
+        self._waiting: Deque[QuerySession] = deque()  # guarded-by: _lock|_cv
+        self._compounds: Dict[int, _Compound] = {}  # guarded-by: _lock|_cv
+        self._pending_compounds: set = set()  # step-scan set  # guarded-by: _lock|_cv
         # one reentrant lock guards ALL shared serving state (scheduler
         # queues, sessions, caches, telemetry); the condition signals
-        # workers on admission and callers on completion.  Serial mode
+        # workers on admission and callers on completion — it *wraps the
+        # same RLock*, so `with self._cv` and `with self._lock` are the
+        # same critical section (one sanitizer node).  Serial mode
         # (workers=0) takes the same lock — uncontended, and it keeps the
         # registry's mutation hooks safe if a pool-mode service shares the
         # registry with a serial one.
-        self._lock = threading.RLock()
-        self._cv = threading.Condition(self._lock)
-        self._pool: Optional[WorkerPool] = None
+        self._lock = make_rlock("QuipService._lock")
+        self._cv = make_condition(self._lock)
+        self._pool: Optional[WorkerPool] = None  # guarded-by: _lock|_cv
         self.registry.subscribe(self._on_mutation,
                                 before=self._check_mutation_safe)
         if workers:
@@ -584,7 +586,7 @@ class QuipService:
         inline ``step``/``result`` work again on whatever remains."""
         if self._pool is not None:
             self._pool.shutdown()  # joins — must not hold the lock here
-            self._pool = None
+            self._pool = None  # unguarded: workers joined; no concurrent readers remain
         with self._lock:
             self.registry.unsubscribe(self._on_mutation)
             while self._waiting:
@@ -606,7 +608,7 @@ class QuipService:
         with self._lock:
             self._release_locked(ticket)
 
-    def _release_locked(self, ticket: int) -> None:
+    def _release_locked(self, ticket: int) -> None:  # requires: _lock|_cv
         comp = self._compounds.get(ticket)
         if comp is not None:
             branch_states = [self._sessions[t].state for t in comp.tickets]
@@ -674,7 +676,7 @@ class QuipService:
             self._resolve_compounds()
             return ticket
 
-    def _resolve_compounds(self) -> None:
+    def _resolve_compounds(self) -> None:  # requires: _lock|_cv
         # Fixpoint, not a single sweep: submitting a nested compound's outer
         # query can itself complete via the result cache, which makes the
         # compound combinable in the same call (the submit-time resolution
@@ -748,7 +750,7 @@ class QuipService:
     def _tenant_quota(self, tenant) -> Optional[int]:
         return self._tenant_quotas.get(tenant, self._default_tenant_quota)
 
-    def _admit(self) -> None:
+    def _admit(self) -> None:  # requires: _lock|_cv
         # FIFO except for per-tenant quotas: a session whose tenant is at
         # its quota is skipped (put back at the front, order preserved) so
         # one tenant's flood cannot head-of-line-block everyone else's
@@ -790,7 +792,7 @@ class QuipService:
         self._resolve_compounds()
         self._cv.notify_all()  # wake result()/wait_idle() waiters
 
-    def _finalize(self, session: QuerySession) -> None:
+    def _finalize(self, session: QuerySession) -> None:  # requires: _lock|_cv
         if session.state == DONE:
             if session.result_cache_hit:
                 # no relational work ran — record the hit with empty

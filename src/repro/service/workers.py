@@ -79,14 +79,17 @@ class WorkerPool:
         if size < 1:
             raise ValueError(f"worker pool size must be >= 1, got {size}")
         self._svc = service
+        # the service's condition over the service RLock — the pool adds
+        # no lock of its own, so lock-order cycles with service state are
+        # impossible by construction
         self._cv: threading.Condition = service._cv
         self.size = int(size)
-        self._groups: Deque[_TaskGroup] = deque()
-        self._busy = 0  # workers currently stepping a session / unit
-        self.steps_done = 0  # session steps run by the pool (under cv)
-        self.units_done = 0  # fan-out units run by the pool (under cv)
-        self._stop = False
-        self._crash: Optional[BaseException] = None
+        self._groups: Deque[_TaskGroup] = deque()  # guarded-by: _cv
+        self._busy = 0  # stepping/unit-running workers  # guarded-by: _cv
+        self.steps_done = 0  # session steps run by the pool  # guarded-by: _cv
+        self.units_done = 0  # fan-out units run by the pool  # guarded-by: _cv
+        self._stop = False  # guarded-by: _cv
+        self._crash: Optional[BaseException] = None  # guarded-by: _cv
         self._threads = [
             threading.Thread(target=self._worker, name=f"quip-worker-{i}",
                              daemon=True)
@@ -133,7 +136,7 @@ class WorkerPool:
                 self._crash = e
                 self._cv.notify_all()
 
-    def _claim_unit(self):
+    def _claim_unit(self):  # requires: _cv
         """Next (group, index) unit, dropping fully-claimed groups (call
         under the cv)."""
         while self._groups:

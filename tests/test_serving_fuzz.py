@@ -24,6 +24,7 @@ from collections import Counter
 import numpy as np
 import pytest
 
+from repro.analysis import lockcheck
 from repro.core.env import env_int
 from repro.core.executor import execute_offline, execute_quip
 from repro.core.plan import Aggregate, Query
@@ -40,6 +41,18 @@ MORSEL_ROWS = 8
 # (env_int fails loud on a typo'd seed instead of silently fuzzing
 # the default sweep)
 _ENV_SEED = env_int("QUIP_FUZZ_SEED")
+
+
+@pytest.fixture(autouse=True)
+def _lock_sanitizer(monkeypatch):
+    """Fuzz under the lock-order sanitizer: every service in the sweep uses
+    instrumented locks, and teardown asserts the acquisition-order graph
+    stayed acyclic (docs/analysis.md).  The replay invariant then also
+    certifies the sanitizer changes no answers."""
+    monkeypatch.setenv("QUIP_SANITIZE", "locks")
+    lockcheck.reset()
+    yield
+    lockcheck.assert_acyclic()
 
 
 def _rand_query(rng: np.random.Generator) -> Query:

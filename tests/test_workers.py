@@ -26,6 +26,7 @@ from collections import Counter
 import numpy as np
 import pytest
 
+from repro.analysis import lockcheck
 from repro.core.stats import QueryRecord, ServingStats
 from repro.service import QuipService, TableRegistry
 from repro.service.lru import LruCache
@@ -33,6 +34,19 @@ from test_quip_correctness import GroundTruthImputer, _build_instance
 from test_serving_fuzz import MORSEL_ROWS, _rand_mutation, _rand_query, _replay
 
 STRATEGIES = ("offline", "eager", "lazy", "adaptive")
+
+
+@pytest.fixture(autouse=True)
+def _lock_sanitizer(monkeypatch):
+    """Run every worker-pool test under the lock-order sanitizer: services
+    built in the test use instrumented locks, and teardown asserts the
+    acquisition-order graph stayed acyclic (docs/analysis.md).  Answers are
+    unaffected — the bit-identical replay asserts below double as the
+    sanitizer-transparency check."""
+    monkeypatch.setenv("QUIP_SANITIZE", "locks")
+    lockcheck.reset()
+    yield
+    lockcheck.assert_acyclic()
 
 
 def _instance(seed: int, rows: int = 48):
