@@ -32,6 +32,7 @@ from benchmarks import (
     exp11_workers,
     exp12_compiled,
     exp13_obs,
+    exp14_ivm,
     kernels_micro,
 )
 
@@ -49,6 +50,7 @@ MODULES = [
     exp11_workers,
     exp12_compiled,
     exp13_obs,
+    exp14_ivm,
     kernels_micro,
 ]
 

@@ -166,6 +166,10 @@ ENV_REGISTRY: Dict[str, EnvKnob] = _registry(
     EnvKnob("QUIP_EXPLAIN", "flag", "off",
             "per-query impute-provenance recording (explain reports)",
             owner="obs/provenance.py"),
+    EnvKnob("QUIP_IVM", "flag", "off",
+            "delta-driven result-cache maintenance: patch cached answers "
+            "under registry mutations instead of evicting them",
+            owner="service/ivm.py"),
     EnvKnob("QUIP_FUZZ_SEED", "int", "unset",
             "extra seed injected into the serving-fuzzer sweeps (CI "
             "repro)", owner="tests/test_serving_fuzz.py"),

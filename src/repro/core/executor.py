@@ -60,9 +60,14 @@ from repro.core.vflist import rewrite_for_quip
 
 __all__ = [
     "ExecutionResult",
+    "AggAux",
+    "GroupStat",
+    "agg_aux_of",
+    "relation_from_agg_aux",
     "execute_quip",
     "execute_offline",
     "evaluate_clean",
+    "evaluate_clean_body",
     "make_plan",
 ]
 
@@ -82,6 +87,11 @@ class ExecutionResult:
     counters: ExecutionCounters
     stats: RuntimeStats
     plan: Optional[PlanNode]
+    # per-group auxiliary aggregate state (counts + exact totals) recorded
+    # alongside aggregate answers; the serving layer's IVM maintainer needs
+    # it to patch COUNT/SUM/AVG answers under table deltas.  None for
+    # non-aggregate answers and paths that don't record it (compiled plans).
+    agg_aux: Optional["AggAux"] = None
 
     def answer_tuples(self) -> List[tuple]:
         return self.relation.to_sorted_tuples()
@@ -956,13 +966,16 @@ class QuipExecutor:
             if chunks
             else self._pad_for_tables(self.query.tables, 0)
         )
+        aux = None
         if agg is not None:
+            aux = agg_aux_of(rel, agg)
             rel = _aggregate(rel, agg)
         elif proj is not None:
             rel = rel.project(list(proj))
         active += time.perf_counter() - t0
         self.counters.wall_seconds = active + self.engine.simulated_seconds
-        self.result = ExecutionResult(rel, self.counters, self.stats, self.root)
+        self.result = ExecutionResult(rel, self.counters, self.stats,
+                                      self.root, agg_aux=aux)
 
     def run(self) -> ExecutionResult:
         for _ in self.steps():
@@ -987,6 +1000,109 @@ class QuipExecutor:
 # --------------------------------------------------------------------------- #
 # aggregation (over fully-resolved rows)
 # --------------------------------------------------------------------------- #
+# Totals whose absolute-value bound stays under 2^52 are exactly
+# representable in float64 at every pairwise partial sum, so the patched
+# (python-int) total cast to float64 is bit-identical to numpy's
+# sum()/mean() over the hypothetical re-executed body (2^52, not 2^53,
+# leaves margin for the float64 bound estimate itself).
+_EXACT_ABS_BOUND = float(2 ** 52)
+
+
+@dataclasses.dataclass
+class GroupStat:
+    """Linear per-group state: row/present counts plus (for int attributes
+    within the exact-float64 bound) exact totals as python ints.  Adding /
+    subtracting two GroupStats is exactly how a COUNT/SUM/AVG answer is
+    maintained under a delta."""
+
+    n_rows: int
+    n_present: int
+    total: int = 0
+    abs_total: int = 0
+    exact: bool = False  # totals are exact python ints (int attr, in bound)
+
+
+@dataclasses.dataclass
+class AggAux:
+    """Aggregate auxiliary state emitted next to an aggregate answer.
+
+    ``groups`` maps group key (python scalar; ``None`` for the scalar,
+    non-grouped case) → :class:`GroupStat`.  ``valid`` is False when the
+    grouping column had missing/absent/NaN cells — group identity is then
+    fill-payload-dependent and the answer is not safely patchable."""
+
+    op: str
+    attr: Optional[str]
+    group_by: Optional[str]
+    attr_kind: Optional[str]
+    valid: bool
+    groups: Dict[object, GroupStat]
+
+
+def _group_stat(group: np.ndarray, n_rows: int, is_int_attr: bool,
+                has_attr: bool) -> GroupStat:
+    if not has_attr:
+        return GroupStat(n_rows=n_rows, n_present=n_rows,
+                         total=0, abs_total=0, exact=True)
+    n_present = len(group)
+    if not is_int_attr:
+        return GroupStat(n_rows=n_rows, n_present=n_present, exact=False)
+    bound = float(np.sum(np.abs(group), dtype=np.float64)) if n_present else 0.0
+    if bound >= _EXACT_ABS_BOUND:
+        return GroupStat(n_rows=n_rows, n_present=n_present, exact=False)
+    total = int(np.sum(group, dtype=np.int64)) if n_present else 0
+    abs_total = int(np.sum(np.abs(group), dtype=np.int64)) if n_present else 0
+    return GroupStat(n_rows=n_rows, n_present=n_present,
+                     total=total, abs_total=abs_total, exact=True)
+
+
+def _pykey(k) -> object:
+    return float(k) if isinstance(k, (np.floating, float)) else int(k)
+
+
+def agg_aux_of(rel: MaskedRelation, agg) -> AggAux:
+    """The :class:`AggAux` for aggregating ``rel`` — computable standalone
+    (the IVM maintainer runs it over delta bodies) or alongside
+    :func:`_aggregate` (same grouping semantics: raw group-by values,
+    present-only attribute values)."""
+    op, attr, gb = agg.op, agg.attr, agg.group_by
+    attr_kind = rel.schema.column(attr).kind if attr else None
+    is_int = attr_kind == "int"
+    if attr:
+        present = rel.is_present(attr)
+        avals = rel.values(attr)
+    valid = True
+    groups: Dict[object, GroupStat] = {}
+    if gb is None:
+        if attr:
+            group = avals[present]
+            groups[None] = _group_stat(group, rel.num_rows, is_int, True)
+        else:
+            groups[None] = _group_stat(
+                np.empty(0), rel.num_rows, False, False
+            )
+    else:
+        keys = rel.values(gb)
+        if rel.num_rows and not rel.is_present(gb).all():
+            # a missing/absent group-by cell groups under its fill payload —
+            # answer-reproducible but not delta-patchable
+            valid = False
+        elif np.issubdtype(keys.dtype, np.floating) and np.isnan(keys).any():
+            valid = False  # NaN != NaN breaks group-key arithmetic
+        else:
+            for k in np.unique(keys):
+                m = keys == k
+                n_rows = int(m.sum())
+                if attr:
+                    group = avals[m & present]
+                    groups[_pykey(k)] = _group_stat(group, n_rows, is_int, True)
+                else:
+                    groups[_pykey(k)] = _group_stat(
+                        np.empty(0), n_rows, False, False
+                    )
+    return AggAux(op, attr, gb, attr_kind, valid, groups)
+
+
 def _aggregate(rel: MaskedRelation, agg) -> MaskedRelation:
     op, attr, gb = agg.op, agg.attr, agg.group_by
     out_name = f"{op}({attr or '*'})"
@@ -1053,6 +1169,74 @@ def _aggregate(rel: MaskedRelation, agg) -> MaskedRelation:
     )
     if any(null_rows):
         out.absent[out_name][np.asarray(null_rows, dtype=bool)] = True
+    return out
+
+
+def relation_from_agg_aux(aux: AggAux, schema: Schema
+                          ) -> Optional[MaskedRelation]:
+    """Rebuild the aggregate answer relation from (patched) auxiliary
+    state, reproducing :func:`_aggregate` bit-for-bit — same group order
+    (ascending keys, as ``np.unique`` emits), same NULL rule (absent bit +
+    0 payload for a non-count aggregate over zero present inputs), same
+    dtypes (via the cached answer's ``schema``).  Returns ``None`` when an
+    exact rebuild is not provable: invalid grouping state, MIN/MAX, float
+    totals, or totals outside the exact-float64 bound."""
+    op, attr, gb = aux.op, aux.attr, aux.group_by
+    if not aux.valid or op not in ("count", "sum", "avg"):
+        return None
+    if op != "count" and (attr is None or aux.attr_kind != "int"):
+        return None
+    out_name = f"{op}({attr or '*'})"
+
+    def value_of(st: GroupStat):
+        # mirrors _aggregate: count(attr)=n_present, count(*)=n_rows, the
+        # NULL rule applies only to non-count ops, avg is exact-int total
+        # over present count (same IEEE division np.mean performs)
+        if op == "count":
+            return (st.n_present if attr else st.n_rows), False
+        if st.n_present == 0:
+            return 0, True
+        if not st.exact or st.abs_total >= _EXACT_ABS_BOUND:
+            return None
+        if op == "sum":
+            return st.total, False
+        return st.total / st.n_present, False
+
+    if gb is None:
+        st = aux.groups.get(None)
+        if st is None or st.n_rows < 0 or st.n_present < 0:
+            return None
+        vo = value_of(st)
+        if vo is None:
+            return None
+        val, null_out = vo
+        out = MaskedRelation.from_columns(
+            schema, {out_name: np.array([val])}
+        )
+        if null_out:
+            out.absent[out_name][:] = True
+        return out
+
+    live = {k: st for k, st in aux.groups.items() if st.n_rows != 0}
+    if any(st.n_rows < 0 or st.n_present < 0 or st.n_present > st.n_rows
+           for st in live.values()):
+        return None
+    keys = sorted(live)
+    vals, nulls = [], []
+    for k in keys:
+        vo = value_of(live[k])
+        if vo is None:
+            return None
+        v, nl = vo
+        vals.append(v)
+        nulls.append(nl)
+    gb_dtype = schema.column(gb).np_dtype
+    out = MaskedRelation.from_columns(schema, {
+        gb: np.asarray(keys, dtype=gb_dtype),
+        out_name: np.asarray(vals, dtype=schema.column(out_name).np_dtype),
+    })
+    if any(nulls):
+        out.absent[out_name][np.asarray(nulls, dtype=bool)] = True
     return out
 
 
@@ -1139,17 +1323,39 @@ def execute_offline(
             rows = np.nonzero(rel.is_missing(a))[0]
             if len(rows):
                 rel.set_values(a, rows, engine.lookup(t, a, rel.tids[t][rows]))
-    rel = evaluate_clean(query, clean)
+    body = evaluate_clean_body(query, clean)
+    aux = None
+    if query.aggregate is not None:
+        aux = agg_aux_of(body, query.aggregate)
+        rel = _aggregate(body, query.aggregate)
+    elif query.projection:
+        rel = body.project(list(query.projection))
+    else:
+        rel = body
     engine.counters.wall_seconds = (
         time.perf_counter() - t0
     ) + engine.simulated_seconds
-    return ExecutionResult(rel, engine.counters, engine.stats, None)
+    return ExecutionResult(rel, engine.counters, engine.stats, None,
+                           agg_aux=aux)
 
 
 def evaluate_clean(query: Query, tables: Dict[str, MaskedRelation]
                    ) -> MaskedRelation:
     """Independent relational oracle over clean (no-missing) tables: filter,
     join (in a connectivity-preserving order), project/aggregate."""
+    body = evaluate_clean_body(query, tables)
+    if query.aggregate is not None:
+        return _aggregate(body, query.aggregate)
+    if query.projection:
+        return body.project(list(query.projection))
+    return body
+
+
+def evaluate_clean_body(query: Query, tables: Dict[str, MaskedRelation]
+                        ) -> MaskedRelation:
+    """The pre-aggregate/projection body of :func:`evaluate_clean`: filter
+    each table, join in a connectivity-preserving order, return the full
+    joined relation."""
     filtered: Dict[str, MaskedRelation] = {}
     for t in query.tables:
         rel = tables[t]
@@ -1191,8 +1397,4 @@ def evaluate_clean(query: Query, tables: Dict[str, MaskedRelation]
         cur = cur.take(p_idx).hstack(other.take(b_idx))
         done.add(table_of(other_attr))
 
-    if query.aggregate is not None:
-        return _aggregate(cur, query.aggregate)
-    if query.projection:
-        return cur.project(list(query.projection))
     return cur

@@ -235,6 +235,10 @@ class ServingStats:
         self.plans_invalidated = 0  # PlanCache entries evicted by mutations
         self.results_invalidated = 0  # ResultCache entries purged
         self.store_cells_invalidated = 0  # shared-store cells dropped
+        # delta-driven maintenance (QUIP_IVM, service/ivm.py): per dependent
+        # cached answer, exactly one of these two advances per mutation
+        self.results_patched = 0  # answers patched in place of eviction
+        self.ivm_fallbacks = 0  # answers that had to fall back to eviction
 
     def observe_concurrency(self, running: int) -> None:
         self.max_concurrent = max(self.max_concurrent, int(running))
@@ -336,6 +340,8 @@ class ServingStats:
             "plans_invalidated": self.plans_invalidated,
             "results_invalidated": self.results_invalidated,
             "store_cells_invalidated": self.store_cells_invalidated,
+            "results_patched": self.results_patched,
+            "ivm_fallbacks": self.ivm_fallbacks,
             "imputations": total.imputations,
             "impute_batches": total.impute_batches,
             "impute_cross_hits": total.impute_cross_hits,

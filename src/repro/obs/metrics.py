@@ -273,6 +273,12 @@ def build_service_metrics(svc) -> MetricsRegistry:
     reg.counter("quip_store_cells_invalidated_total",
                 "Shared-store cells dropped by mutations.",
                 lambda: serving.store_cells_invalidated)
+    reg.counter("quip_results_patched_total",
+                "Cached answers patched in place by IVM (QUIP_IVM).",
+                lambda: serving.results_patched)
+    reg.counter("quip_ivm_fallbacks_total",
+                "IVM maintenance attempts that fell back to eviction.",
+                lambda: serving.ivm_fallbacks)
     reg.gauge("quip_registry_epoch", "Registry global mutation epoch.",
               lambda: svc.registry.global_epoch)
 

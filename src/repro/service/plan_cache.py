@@ -90,8 +90,14 @@ class PlanCache(LruCache):
         self.planner = planner
 
     def get(self, query: Query, tables: Dict[str, MaskedRelation],
-            planner: Optional[str] = None) -> Tuple[PlanNode, bool]:
+            planner: Optional[str] = None,
+            extra_dep_tables: Tuple[str, ...] = ()) -> Tuple[PlanNode, bool]:
         """Returns ``(plan, hit)``; plans the query on a miss.
+
+        ``extra_dep_tables`` widens the reverse-index dependency set beyond
+        the signature's own tables — a compound outer query rewritten from
+        a sub-query result depends on the sub-query's tables too, even
+        though its signature never names them (the entry-leak fix).
 
         All hit bookkeeping (the LRU's counters via ``lookup`` plus the
         entry's per-signature count) lands *before* ``clone_plan`` runs, so
@@ -104,7 +110,8 @@ class PlanCache(LruCache):
             entry.hits += 1
             return clone_plan(entry.plan), True
         plan = make_plan(query, tables, planner=planner)
-        self.insert(sig, _PlanEntry(plan))
+        self.insert(sig, _PlanEntry(plan),
+                    tables=tuple(sig[1]) + tuple(extra_dep_tables))
         return clone_plan(plan), False
 
     # -- per-signature hotness + compiled artifacts --------------------- #

@@ -21,11 +21,21 @@ Semantics:
   (``tids`` re-indexed to ``arange(n)``), so the dense per-(table, attr)
   imputation caches — recreated after invalidation — size to the new row
   count and base-row ids line up again.
+* Arguments are validated **pre-commit**: unknown attributes, value-length
+  mismatches, out-of-range or non-integer row ids, and value arrays whose
+  dtype cannot be safely cast to the column dtype all raise *before* any
+  epoch bump or table swap, so a failed mutation leaves the registry (and
+  every cache keyed on its epochs) untouched.
 * Every mutation bumps the table's epoch and the global epoch, then
   notifies subscribers.  Subscribers may also register a ``before`` hook
   that can veto the mutation (raise) while nothing has been committed —
   QuipService uses this to refuse mutating a table that shared-impute
   sessions are currently reading.
+* Subscribers registered with ``delta=True`` additionally receive the
+  commit as a :class:`~repro.core.delta.TableDelta` (``None`` when the
+  commit is not expressible as a delta — ``replace_table``, duplicate row
+  ids in one ``update_rows``); the serving layer's IVM maintainer uses
+  this to patch cached answers instead of evicting them (docs/ivm.md).
 """
 
 from __future__ import annotations
@@ -35,9 +45,20 @@ from typing import Callable, Dict, Iterable, Iterator, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.delta import (
+    TableDelta,
+    delta_for_delete,
+    delta_for_insert,
+    delta_for_update,
+)
 from repro.core.relation import MaskedRelation
 
 __all__ = ["TableRegistry"]
+
+# (before, after, wants_delta): ``before`` may veto by raising; ``after``
+# is called post-commit as ``after(table)`` or — when wants_delta —
+# ``after(table, delta)``.
+_Subscriber = Tuple[Optional[Callable[[str], None]], Callable, bool]
 
 
 class TableRegistry(Mapping):
@@ -48,9 +69,7 @@ class TableRegistry(Mapping):
         self._tables: Dict[str, MaskedRelation] = dict(tables)
         self._epochs: Dict[str, int] = {t: 0 for t in self._tables}
         self._global_epoch = 0
-        # (before, after) hooks; ``before`` may veto by raising
-        self._subscribers: List[Tuple[Optional[Callable[[str], None]],
-                                      Callable[[str], None]]] = []
+        self._subscribers: List[_Subscriber] = []
 
     # ------------------------------------------------------------------ #
     # Mapping interface (drop-in for the plain tables dict)
@@ -83,14 +102,18 @@ class TableRegistry(Mapping):
     # ------------------------------------------------------------------ #
     # invalidation hooks
     # ------------------------------------------------------------------ #
-    def subscribe(self, on_mutation: Callable[[str], None], *,
-                  before: Optional[Callable[[str], None]] = None) -> None:
+    def subscribe(self, on_mutation: Callable, *,
+                  before: Optional[Callable[[str], None]] = None,
+                  delta: bool = False) -> None:
         """Register invalidation hooks.  ``before(table)`` runs pre-commit
-        and may raise to veto (nothing mutated yet); ``on_mutation(table)``
-        runs post-commit, observing the new table and epochs."""
-        self._subscribers.append((before, on_mutation))
+        and may raise to veto (nothing mutated yet); ``on_mutation`` runs
+        post-commit, observing the new table and epochs — called as
+        ``on_mutation(table)`` or, with ``delta=True``, as
+        ``on_mutation(table, delta)`` where ``delta`` is the commit's
+        :class:`TableDelta` (or ``None`` for non-delta commits)."""
+        self._subscribers.append((before, on_mutation, bool(delta)))
 
-    def unsubscribe(self, on_mutation: Callable[[str], None]) -> None:
+    def unsubscribe(self, on_mutation: Callable) -> None:
         """Remove the hooks registered with ``on_mutation``.  A subscriber
         discarded while the registry lives on (service churn over one
         long-lived registry) must unsubscribe, or the registry keeps it —
@@ -100,20 +123,31 @@ class TableRegistry(Mapping):
         # access, so ``registry.unsubscribe(svc._on_mutation)`` must match
         # the equal-but-distinct object stored by subscribe
         self._subscribers = [
-            (b, a) for b, a in self._subscribers if a != on_mutation
+            (b, a, w) for b, a, w in self._subscribers if a != on_mutation
         ]
 
     # ------------------------------------------------------------------ #
     # mutation API (all copy-on-write; all bump epochs + notify)
     # ------------------------------------------------------------------ #
-    def _commit(self, table: str,
-                build: Callable[[MaskedRelation], MaskedRelation]) -> None:
+    def _commit(
+        self, table: str,
+        build: Callable[[MaskedRelation], MaskedRelation],
+        make_delta: Optional[
+            Callable[[MaskedRelation, MaskedRelation], Optional[TableDelta]]
+        ] = None,
+    ) -> None:
         if table not in self._tables:
             raise KeyError(f"unknown table {table!r}")
-        for before, _after in self._subscribers:
+        for before, _after, _w in self._subscribers:
             if before is not None:
                 before(table)
-        self._tables[table] = build(self._tables[table])
+        old = self._tables[table]
+        new = build(old)
+        # materialize the delta slices only if someone will consume them
+        delta: Optional[TableDelta] = None
+        if make_delta is not None and any(w for _b, _a, w in self._subscribers):
+            delta = make_delta(old, new)
+        self._tables[table] = new
         self._epochs[table] += 1
         self._global_epoch += 1
         # The mutation is committed and the epoch has advanced: every
@@ -121,9 +155,12 @@ class TableRegistry(Mapping):
         # otherwise later subscribers keep serving stale plans/answers whose
         # epoch keys claim freshness.  Run them all, then re-raise.
         errors = []
-        for _before, after in self._subscribers:
+        for _before, after, wants_delta in self._subscribers:
             try:
-                after(table)
+                if wants_delta:
+                    after(table, delta)
+                else:
+                    after(table)
             except Exception as e:
                 errors.append(e)
         if errors:
@@ -138,7 +175,14 @@ class TableRegistry(Mapping):
 
     @staticmethod
     def _check_rows(rel: MaskedRelation, rows: np.ndarray) -> np.ndarray:
-        rows = np.asarray(rows, dtype=np.int64)
+        rows_in = np.asarray(rows)
+        if rows_in.size and not np.issubdtype(rows_in.dtype, np.integer):
+            # float row ids would silently truncate under an astype —
+            # refuse them before anything is committed
+            raise TypeError(
+                f"row ids must be integers, got dtype {rows_in.dtype}"
+            )
+        rows = rows_in.astype(np.int64, copy=False).reshape(-1)
         if len(rows) and (rows.min() < 0 or rows.max() >= rel.num_rows):
             raise IndexError(
                 f"row ids out of range [0, {rel.num_rows}): "
@@ -149,29 +193,56 @@ class TableRegistry(Mapping):
     def update_rows(self, table: str, rows: np.ndarray,
                     values: Dict[str, np.ndarray]) -> None:
         """Overwrite ``values[attr][i]`` into row ``rows[i]`` of ``table``
-        for each attr; updated cells become known (missing bit cleared)."""
+        for each attr; updated cells become known (missing bit cleared).
 
-        def build(rel: MaskedRelation) -> MaskedRelation:
-            idx = self._check_rows(rel, rows)
-            new = rel.copy()
-            for attr, vals in values.items():
-                vals = np.asarray(vals)
-                if len(vals) != len(idx):
-                    raise ValueError(
-                        f"{table}.{attr}: {len(vals)} values for "
-                        f"{len(idx)} rows"
-                    )
-                new.set_values(attr, idx, vals)
+        Validates everything pre-commit: row ids (integer dtype, in
+        bounds), attribute names, value lengths, and value dtypes
+        (``same_kind``-castable to the column dtype — a float array
+        aimed at an int column raises instead of silently truncating)."""
+        if table not in self._tables:
+            raise KeyError(f"unknown table {table!r}")
+        rel = self._tables[table]
+        idx = self._check_rows(rel, rows)
+        checked: Dict[str, np.ndarray] = {}
+        for attr, vals in values.items():
+            if not rel.schema.has(attr):
+                raise KeyError(
+                    f"update_rows: no column {attr!r} in table {table!r}"
+                )
+            arr = np.asarray(vals)
+            if len(arr) != len(idx):
+                raise ValueError(
+                    f"{table}.{attr}: {len(arr)} values for {len(idx)} rows"
+                )
+            target = rel.schema.column(attr).np_dtype
+            if not np.can_cast(arr.dtype, target, casting="same_kind"):
+                raise TypeError(
+                    f"update_rows: {table}.{attr} values have dtype "
+                    f"{arr.dtype}, not castable to column dtype "
+                    f"{np.dtype(target)} (same_kind)"
+                )
+            checked[attr] = arr
+
+        def build(old: MaskedRelation) -> MaskedRelation:
+            new = old.copy()
+            for attr, arr in checked.items():
+                new.set_values(attr, idx, arr)
             return new
 
-        self._commit(table, build)
+        self._commit(
+            table, build,
+            make_delta=lambda old, new: delta_for_update(table, old, new, idx),
+        )
 
     def delete_rows(self, table: str, rows: np.ndarray) -> None:
         """Drop rows by id; the table is rebuilt canonically (``tids``
-        re-indexed to ``arange`` of the new row count)."""
+        re-indexed to ``arange`` of the new row count).  Row ids are
+        validated (integer dtype, in bounds) before anything commits."""
+        if table not in self._tables:
+            raise KeyError(f"unknown table {table!r}")
+        idx = self._check_rows(self._tables[table], rows)
 
         def build(rel: MaskedRelation) -> MaskedRelation:
-            idx = self._check_rows(rel, rows)
             keep = np.ones(rel.num_rows, dtype=bool)
             keep[idx] = False
             return MaskedRelation.from_columns(
@@ -181,7 +252,10 @@ class TableRegistry(Mapping):
                 base_table=table,
             )
 
-        self._commit(table, build)
+        self._commit(
+            table, build,
+            make_delta=lambda old, _new: delta_for_delete(table, old, idx),
+        )
 
     def insert_rows(self, table: str, values: Dict[str, np.ndarray],
                     missing: Optional[Dict[str, np.ndarray]] = None) -> None:
@@ -221,8 +295,15 @@ class TableRegistry(Mapping):
                 rel.schema, cols, missing=miss, base_table=table
             )
 
-        self._commit(table, build)
+        self._commit(
+            table, build,
+            make_delta=lambda old, new: delta_for_insert(
+                table, new, old.num_rows
+            ),
+        )
 
     def replace_table(self, table: str, relation: MaskedRelation) -> None:
-        """Swap in a whole new relation under an existing name."""
+        """Swap in a whole new relation under an existing name.  Not
+        expressible as a row delta — subscribers see ``delta=None`` and
+        fall back to full invalidation."""
         self._commit(table, lambda _old: relation)

@@ -37,7 +37,7 @@ import json
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional, Tuple
 
-from repro.analysis.lockcheck import make_condition, make_rlock
+from repro.analysis.lockcheck import make_condition, make_lock, make_rlock
 from repro.core.compiled import (
     CompiledPlan,
     CompileFallback,
@@ -63,6 +63,7 @@ from repro.obs import (
     resolve_tracer,
 )
 from repro.service.impute_store import SharedImputeStore, resolve_shared_impute
+from repro.service.ivm import IvmMaintainer, make_record, resolve_ivm
 from repro.service.plan_cache import PlanCache, query_signature
 from repro.service.registry import TableRegistry
 from repro.service.result_cache import ResultCache
@@ -96,6 +97,8 @@ SUMMARY_KEYS: Dict[str, str] = {
     "plans_invalidated": "plan-cache entries evicted by mutations",
     "results_invalidated": "cached answers purged by mutations",
     "store_cells_invalidated": "shared-store cells dropped by mutations",
+    "results_patched": "cached answers patched in place by IVM (QUIP_IVM)",
+    "ivm_fallbacks": "IVM maintenance attempts that fell back to eviction",
     "imputations": "cells actually imputed (model evaluations)",
     "impute_batches": "deduplicated imputer invocations",
     "impute_cross_hits": "cells served from another query's store fill",
@@ -207,6 +210,7 @@ class QuipService:
         compile_after_hits: int = 2,
         tracer=None,
         explain: Optional[bool] = None,
+        ivm: Optional[bool] = None,
     ):
         assert max_inflight >= 1
         # compiled tensor plans (docs/compiled.md): with
@@ -272,7 +276,11 @@ class QuipService:
             )
         self._tenant_quotas = dict(tenant_quotas or {})
         self._default_tenant_quota = default_tenant_quota
-        self.serving = ServingStats()  # guarded-by: _lock|_cv
+        # mutation-invalidation counters live on serving too; direct bumps
+        # take the dedicated telemetry lock so the lint's lock pass covers
+        # them (lock order: _lock -> _tel_lock, never the reverse)
+        self._tel_lock = make_lock("QuipService._tel_lock")
+        self.serving = ServingStats()  # guarded-by: _tel_lock
         self._exec_kwargs = {
             "morsel_rows": morsel_rows,
             "bloom_impl": bloom_impl,
@@ -296,8 +304,18 @@ class QuipService:
         self._lock = make_rlock("QuipService._lock")
         self._cv = make_condition(self._lock)
         self._pool: Optional[WorkerPool] = None  # guarded-by: _lock|_cv
+        # delta-driven cache maintenance (QUIP_IVM, docs/ivm.md): instead of
+        # purging every dependent cached answer on mutation, patch the ones
+        # the delta algebra can maintain exactly; needs the result cache and
+        # per-query provenance (the imputed-table overlap rule reads it)
+        self._ivm: Optional[IvmMaintainer] = (
+            IvmMaintainer(self.registry, self.result_cache, self._factory,
+                          self._per_attr)
+            if resolve_ivm(ivm) and self.result_cache is not None else None
+        )
         self.registry.subscribe(self._on_mutation,
-                                before=self._check_mutation_safe)
+                                before=self._check_mutation_safe,
+                                delta=True)
         if workers:
             # workers >= 1: N threads pull morsel steps via the scheduler's
             # checkout/checkin split; step() is disabled (it would race)
@@ -313,8 +331,11 @@ class QuipService:
                      ) -> ImputationService:
         # the engine carries the query's observability handles: executors
         # read tracer/provenance off it (getattr), and _flush_key feeds
-        # the provenance recorder at the exact counter-increment site
-        prov = ProvenanceRecorder() if self.explain_enabled else None
+        # the provenance recorder at the exact counter-increment site.
+        # IVM also needs provenance: without the imputed-table set a cached
+        # answer cannot prove the mutated table never fed its imputations.
+        prov = (ProvenanceRecorder()
+                if self.explain_enabled or self._ivm is not None else None)
         if self.store is not None:
             return self.store.bind(self._factory, self._per_attr,
                                    tracer=self.tracer, provenance=prov)
@@ -350,7 +371,8 @@ class QuipService:
         return (query_signature(query, self.plan_cache.planner), exec_sig,
                 epochs)
 
-    def _session_setup(self, query: Query, strategy: str):
+    def _session_setup(self, query: Query, strategy: str,
+                       extra_dep_tables: Tuple[str, ...] = ()):
         """Materialize a session's resources — at admission in serial mode,
         at the first morsel step (on a worker, off the service lock) in
         pool mode; either way a deep waiting queue holds no table copies
@@ -362,7 +384,9 @@ class QuipService:
                 # (or skew the telemetry of) planning it
                 plan, hit = None, False
             else:
-                plan, hit = self.plan_cache.get(query, self.tables)
+                plan, hit = self.plan_cache.get(
+                    query, self.tables, extra_dep_tables=extra_dep_tables
+                )
             if (plan is not None and self.exec_impl == "compiled" and hit
                     and self.plan_cache.hit_count(query)
                     >= self.compile_after_hits):
@@ -408,13 +432,19 @@ class QuipService:
         return plan, engine, tables, hit, key
 
     def submit(self, query: Query, *, strategy: Optional[str] = None,
-               tenant: Optional[int] = None) -> int:
+               tenant: Optional[int] = None,
+               extra_dep_tables: Tuple[str, ...] = ()) -> int:
         """Enqueue a query; returns its ticket.  The result cache is
         consulted first: a signature already answered at the current table
         epochs completes immediately without planning or execution.
         Otherwise admission is immediate when fewer than ``max_inflight``
         sessions are running and the tenant is under its quota, else the
-        session waits (FIFO, quota-blocked sessions skipped in place)."""
+        session waits (FIFO, quota-blocked sessions skipped in place).
+
+        ``extra_dep_tables`` widens the cache-dependency set beyond the
+        query's own tables — a compound outer query rewritten from a
+        sub-query result depends on the sub-query's tables too, even though
+        its signature never names them (they used to leak)."""
         strategy = strategy or self.default_strategy
         with self._lock:
             if self.result_cache is not None:
@@ -442,9 +472,11 @@ class QuipService:
                 ticket=next(self._tickets),
                 query=query,
                 strategy=strategy,
-                setup=lambda: self._session_setup(query, strategy),
+                setup=lambda: self._session_setup(query, strategy,
+                                                  extra_dep_tables),
                 tenant=tenant,
                 exec_kwargs=self._exec_kwargs,
+                extra_dep_tables=extra_dep_tables,
             )
             self._sessions[session.ticket] = session
             session.tracer = self.tracer
@@ -457,7 +489,8 @@ class QuipService:
             self._waiting.append(session)
             self._admit()
             if session.state == QUEUED:  # ring full or quota exhausted
-                self.serving.admission_queued += 1
+                with self._tel_lock:
+                    self.serving.admission_queued += 1
             return session.ticket
 
     def poll(self, ticket: int) -> str:
@@ -701,9 +734,16 @@ class QuipService:
                         outer2 = nested_outer_query(
                             comp.outer, comp.in_attr, sub.result
                         )
+                        # the rewritten outer query bakes the sub-query's
+                        # answer into an IN-set: its cached plan/answer must
+                        # also die when a *sub-query* table mutates
                         comp.tickets.append(self.submit(
                             outer2, strategy=comp.strategy,
-                            tenant=comp.tenant
+                            tenant=comp.tenant,
+                            extra_dep_tables=tuple(
+                                t for t in sub.query.tables
+                                if t not in outer2.tables
+                            ),
                         ))
                         comp.outer = None  # outer submitted; await it
                         progress = True
@@ -852,12 +892,26 @@ class QuipService:
     def _cache_result(self, session: QuerySession) -> None:
         """Insert a completed execution into the result cache, unless a
         mutation landed mid-flight (the key's epochs no longer match — the
-        snapshot this session answered from is already stale)."""
+        snapshot this session answered from is already stale).
+
+        With IVM on, the entry also carries its maintenance sidecar (the
+        query, the provenance-derived imputed-table set, and any aggregate
+        auxiliary state); the dependency set registered in the reverse
+        index includes the session's extra dependency tables so compound
+        rewrites invalidate on their sub-query's tables too."""
         if self.result_cache is None or session.result_key is None:
             return
         current = self._result_key(session.query, session.strategy)
-        if current == session.result_key:
-            self.result_cache.put(session.result_key, session.result)
+        if current != session.result_key:
+            return
+        record = None
+        if self._ivm is not None:
+            prov = (getattr(session.engine, "provenance", None)
+                    if session.engine is not None else None)
+            record = make_record(session.query, session.result, prov)
+        deps = tuple(session.query.tables) + tuple(session.extra_dep_tables)
+        self.result_cache.put(session.result_key, session.result,
+                              ivm=record, tables=deps)
 
     # ------------------------------------------------------------------ #
     # registry-mutation invalidation (subscribed in __init__)
@@ -881,18 +935,34 @@ class QuipService:
                 f"(run_until_idle) or use per-query isolation"
             )
 
-    def _on_mutation(self, table: str) -> None:
-        """Post-commit invalidation: the mutated table's epoch already
-        advanced; evict every cache entry derived from its old contents."""
+    def _on_mutation(self, table: str, delta=None) -> None:
+        """Post-commit maintenance: the mutated table's epoch already
+        advanced.  Plans are always evicted (their join order came from
+        now-stale selectivity scans).  Cached answers are evicted too —
+        unless IVM is on, in which case the maintainer patches every
+        dependent answer the delta algebra can maintain exactly and evicts
+        only the fallbacks (per dependent entry, exactly one of
+        ``results_patched`` / ``ivm_fallbacks`` advances)."""
         with self._lock:
             plans = self.plan_cache.invalidate_table(table)
-            results = (
-                self.result_cache.invalidate_table(table)
-                if self.result_cache is not None else 0
-            )
+            patched = 0
+            if self._ivm is not None:
+                patched, results = self._ivm.apply(table, delta)
+            else:
+                results = (
+                    self.result_cache.invalidate_table(table)
+                    if self.result_cache is not None else 0
+                )
             cells = (self.store.invalidate(table)
                      if self.store is not None else 0)
-            self.serving.record_invalidation(plans, results, cells)
+            with self._tel_lock:
+                self.serving.invalidation_events += 1
+                self.serving.plans_invalidated += plans
+                self.serving.results_invalidated += results
+                self.serving.store_cells_invalidated += cells
+                self.serving.results_patched += patched
+                if self._ivm is not None:
+                    self.serving.ivm_fallbacks += results
 
     # ------------------------------------------------------------------ #
     # telemetry
@@ -904,7 +974,8 @@ class QuipService:
             return self._summary_locked()
 
     def _summary_locked(self) -> Dict[str, float]:
-        out = self.serving.summary()
+        with self._tel_lock:  # consistent snapshot of the counter fields
+            out = self.serving.summary()
         out.update({
             f"plan_cache_{k}": v for k, v in self.plan_cache.stats().items()
         })

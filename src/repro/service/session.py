@@ -53,6 +53,7 @@ class QuerySession:
         setup: SessionSetup,
         tenant: Optional[int] = None,
         exec_kwargs: Optional[Dict] = None,
+        extra_dep_tables: Tuple[str, ...] = (),
     ):
         self.ticket = ticket
         self.query = query
@@ -60,6 +61,9 @@ class QuerySession:
         self.tenant = tenant
         self._setup = setup
         self.exec_kwargs = dict(exec_kwargs or {})
+        # cache-dependency tables beyond query.tables (compound rewrites:
+        # the baked-in IN-set depends on the sub-query's tables)
+        self.extra_dep_tables: Tuple[str, ...] = tuple(extra_dep_tables)
 
         self.plan: Optional[PlanNode] = None
         self.engine: Optional[ImputationService] = None

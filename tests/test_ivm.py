@@ -1,0 +1,444 @@
+"""Delta-driven cache maintenance (QUIP_IVM): Z-set algebra, registry
+deltas + pre-commit validation, the LRU reverse index, and service-level
+patch/fallback behaviour.
+
+The correctness contract everywhere: a patched cached answer is
+bit-identical to what a cold re-execution over the mutated registry would
+produce, and per mutation every dependent cached answer is either patched
+or evicted (never silently left stale)."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.delta import (
+    TableDelta,
+    ZSet,
+    delta_for_delete,
+    delta_for_insert,
+    delta_for_update,
+)
+from repro.core.plan import Aggregate, Query
+from repro.core.predicates import SelectionPredicate
+from repro.core.relation import MaskedRelation
+from repro.core.schema import ColumnSpec, Schema
+from repro.imputers.base import ImputationService
+from repro.imputers.mean import MeanImputer
+from repro.core.executor import execute_quip
+from repro.service import QuipService, TableRegistry
+from repro.service.ivm import referenced_attrs, resolve_ivm
+from repro.service.lru import LruCache
+
+
+# --------------------------------------------------------------------------- #
+# ZSet: abelian-group laws
+# --------------------------------------------------------------------------- #
+def test_zset_group_laws():
+    a = ZSet.from_rows([(1,), (1,), (2,)])
+    b = ZSet.from_rows([(2,), (3,)], weight=-1)
+    zero = ZSet()
+    assert a.add(b) == b.add(a)  # commutative
+    c = ZSet.from_rows([(9,)])
+    assert a.add(b).add(c) == a.add(b.add(c))  # associative
+    assert a.add(zero) == a  # identity
+    assert a.add(a.negate()).consolidate() == zero  # inverse
+    assert len(a.add(a.negate())) == 0  # consolidated length
+
+
+def test_zset_weights_and_positivity():
+    z = ZSet.from_rows([(1,), (1,), (2,)])
+    assert z.weight((1,)) == 2 and z.weight((2,)) == 1
+    assert z.weight((3,)) == 0
+    assert z.is_positive()
+    removed = z.add(ZSet.from_rows([(2,), (2,)], weight=-1))
+    assert not removed.consolidate().is_positive()
+    assert removed.weight((2,)) == -1
+
+
+def test_zset_unhashable():
+    with pytest.raises(TypeError):
+        hash(ZSet())
+
+
+# --------------------------------------------------------------------------- #
+# registry deltas
+# --------------------------------------------------------------------------- #
+def _table(name="T", n=6):
+    schema = Schema(name, [ColumnSpec(f"{name}.k", "int"),
+                           ColumnSpec(f"{name}.v", "int")])
+    return MaskedRelation.from_columns(
+        schema,
+        {f"{name}.k": np.arange(n, dtype=np.int64),
+         f"{name}.v": np.arange(n, dtype=np.int64) * 10},
+        base_table=name,
+    )
+
+
+def _capture(reg):
+    seen = []
+    reg.subscribe(lambda table, delta: seen.append((table, delta)),
+                  delta=True)
+    return seen
+
+
+def test_update_delta_shape():
+    reg = TableRegistry({"T": _table()})
+    seen = _capture(reg)
+    reg.update_rows("T", np.array([1, 3]), {"T.v": np.array([111, 333])})
+    (table, delta), = seen
+    assert table == "T"
+    assert delta.removed_rows == 2 and delta.added_rows == 2
+    z = delta.to_zset().consolidate()
+    # update = remove old + add new, keyed (positional tid, row values)
+    assert z.weight((0, (1, 10))) == -1 and z.weight((0, (1, 111))) == 1
+    assert z.weight((1, (3, 30))) == -1 and z.weight((1, (3, 333))) == 1
+
+
+def test_noop_update_cancels_in_zset():
+    reg = TableRegistry({"T": _table()})
+    seen = _capture(reg)
+    reg.update_rows("T", np.array([2]), {"T.v": np.array([20])})  # same value
+    (_, delta), = seen
+    assert delta is not None
+    assert delta.to_zset().consolidate() == ZSet()
+
+
+def test_delete_and_insert_deltas():
+    reg = TableRegistry({"T": _table()})
+    seen = _capture(reg)
+    reg.delete_rows("T", np.array([0, 5]))
+    reg.insert_rows("T", {"T.k": np.array([7]), "T.v": np.array([70])})
+    (_, d_del), (_, d_ins) = seen
+    assert d_del.added is None and d_del.removed_rows == 2
+    assert d_ins.removed is None and d_ins.added_rows == 1
+    assert d_ins.to_zset().weight((0, (7, 70))) == 1
+
+
+def test_duplicate_update_rows_yield_no_delta():
+    reg = TableRegistry({"T": _table()})
+    seen = _capture(reg)
+    reg.update_rows("T", np.array([2, 2]), {"T.v": np.array([5, 6])})
+    (_, delta), = seen
+    assert delta is None  # inexpressible: later write wins in set_values
+
+
+def test_replace_table_yields_no_delta():
+    reg = TableRegistry({"T": _table()})
+    seen = _capture(reg)
+    reg.replace_table("T", _table(n=3))
+    (_, delta), = seen
+    assert delta is None
+
+
+def test_delta_slices_are_canonical_standalone_tables():
+    rel = _table()
+    d = delta_for_update("T", rel, rel, np.array([4, 2]))
+    # slices carry arange tids (valid standalone tables for sub-execution)
+    np.testing.assert_array_equal(d.removed.tids["T"], [0, 1])
+    assert d.removed.values("T.k").tolist() == [4, 2]
+    assert delta_for_delete("T", rel, np.array([3, 1, 3])).removed_rows == 2
+    grown = _table(n=8)
+    assert delta_for_insert("T", grown, 6).added.values("T.k").tolist() == [6, 7]
+
+
+# --------------------------------------------------------------------------- #
+# satellite: pre-commit mutation validation (nothing committed on failure)
+# --------------------------------------------------------------------------- #
+def _assert_untouched(reg, seen):
+    assert reg.epoch("T") == 0 and reg.global_epoch == 0
+    assert seen == []
+    assert reg["T"].values("T.v").tolist() == [0, 10, 20, 30, 40, 50]
+
+
+def test_update_rejects_float_row_ids():
+    reg = TableRegistry({"T": _table()})
+    seen = _capture(reg)
+    with pytest.raises(TypeError, match="row ids must be integers"):
+        reg.update_rows("T", np.array([0.5]), {"T.v": np.array([1])})
+    _assert_untouched(reg, seen)
+
+
+def test_update_rejects_uncastable_value_dtype():
+    reg = TableRegistry({"T": _table()})
+    seen = _capture(reg)
+    with pytest.raises(TypeError, match="not castable"):
+        reg.update_rows("T", np.array([0]), {"T.v": np.array([1.5])})
+    _assert_untouched(reg, seen)
+
+
+def test_update_rejects_unknown_attr_and_length_mismatch():
+    reg = TableRegistry({"T": _table()})
+    seen = _capture(reg)
+    with pytest.raises(KeyError, match="no column"):
+        reg.update_rows("T", np.array([0]), {"T.nope": np.array([1])})
+    with pytest.raises(ValueError, match="2 values for 1 rows"):
+        reg.update_rows("T", np.array([0]), {"T.v": np.array([1, 2])})
+    _assert_untouched(reg, seen)
+
+
+def test_row_bounds_checked_before_commit():
+    reg = TableRegistry({"T": _table()})
+    seen = _capture(reg)
+    with pytest.raises(IndexError, match="out of range"):
+        reg.update_rows("T", np.array([6]), {"T.v": np.array([1])})
+    with pytest.raises(IndexError, match="out of range"):
+        reg.delete_rows("T", np.array([-1]))
+    with pytest.raises(TypeError, match="row ids must be integers"):
+        reg.delete_rows("T", np.array([1.0]))
+    _assert_untouched(reg, seen)
+
+
+def test_empty_row_list_is_fine():
+    reg = TableRegistry({"T": _table()})
+    reg.delete_rows("T", np.array([], dtype=np.int64))
+    reg.delete_rows("T", [])  # empty python list: float64 dtype, size 0
+    assert reg.epoch("T") == 2 and reg["T"].num_rows == 6
+
+
+# --------------------------------------------------------------------------- #
+# LruCache reverse index
+# --------------------------------------------------------------------------- #
+class _TableKeyed(LruCache):
+    def _key_tables(self, key):
+        return key[0]  # key = (tables_tuple, tag)
+
+
+def test_reverse_index_tracks_inserts_and_removal():
+    c = _TableKeyed(8)
+    c.insert((("A", "B"), 1), "x")
+    c.insert((("B",), 2), "y")
+    assert sorted(c.keys_for_table("B")) == [(("A", "B"), 1), (("B",), 2)]
+    assert c.keys_for_table("A") == ((("A", "B"), 1),)
+    assert c.dependencies((("A", "B"), 1)) == ("A", "B")
+    assert c.remove((("A", "B"), 1))
+    assert not c.remove((("A", "B"), 1))  # idempotent, silent
+    assert c.keys_for_table("A") == ()
+    assert c.stats()["invalidations"] == 0  # remove() is not invalidation
+
+
+def test_reverse_index_widened_dependencies():
+    # the compound-leak fix: an entry can depend on tables its key never
+    # names; invalidate_table must still find (and purge) it
+    c = _TableKeyed(8)
+    c.insert((("A",), 1), "x", tables=("A", "S"))
+    assert c.keys_for_table("S") == ((("A",), 1),)
+    assert c.invalidate_table("S") == 1
+    assert len(c) == 0 and c.keys_for_table("A") == ()
+
+
+def test_eviction_unlinks_reverse_index():
+    c = _TableKeyed(2)
+    c.insert((("A",), 1), "x")
+    c.insert((("B",), 2), "y")
+    c.insert((("C",), 3), "z")  # evicts the A entry (LRU)
+    assert c.keys_for_table("A") == ()
+    assert c.stats()["evictions"] == 1
+    # overwrite re-links under the new dependency set
+    c.insert((("B",), 2), "y2", tables=("D",))
+    assert c.keys_for_table("B") == () and c.keys_for_table("D") != ()
+
+
+def test_invalidate_key_counts():
+    c = _TableKeyed(4)
+    c.insert((("A",), 1), "x")
+    assert c.invalidate_key((("A",), 1))
+    assert not c.invalidate_key((("A",), 1))
+    assert c.stats()["invalidations"] == 1
+
+
+# --------------------------------------------------------------------------- #
+# referenced_attrs
+# --------------------------------------------------------------------------- #
+def test_referenced_attrs_covers_predicates_projection_aggregate():
+    q = Query(("R", "S"), (SelectionPredicate("R.v", ">", 1),), (),
+              (), Aggregate("sum", "S.v", group_by="S.g"))
+    cols = {"R": ["R.k", "R.v"], "S": ["S.k", "S.v", "S.g"]}
+    refs = referenced_attrs(q, cols)
+    assert refs["R"] == {"R.v"} and refs["S"] == {"S.v", "S.g"}
+    # whole-row output (no projection, no aggregate): every column counts
+    q2 = Query(("R",), (), (), ())
+    assert referenced_attrs(q2, cols)["R"] == {"R.k", "R.v"}
+
+
+def test_resolve_ivm_env(monkeypatch):
+    monkeypatch.delenv("QUIP_IVM", raising=False)
+    assert resolve_ivm() is False
+    assert resolve_ivm(True) is True
+    monkeypatch.setenv("QUIP_IVM", "on")
+    assert resolve_ivm() is True
+    assert resolve_ivm(False) is False  # explicit argument wins
+
+
+# --------------------------------------------------------------------------- #
+# service-level patching
+# --------------------------------------------------------------------------- #
+def _mk(name, n, v, missing=None):
+    schema = Schema(name, [ColumnSpec(f"{name}.k", "int"),
+                           ColumnSpec(f"{name}.v", "int")])
+    miss = {f"{name}.v": np.asarray(missing, dtype=bool)} if missing is not None else None
+    return MaskedRelation.from_columns(
+        schema,
+        {f"{name}.k": np.arange(n, dtype=np.int64) % 3,
+         f"{name}.v": np.asarray(v, dtype=np.int64)},
+        missing=miss, base_table=name,
+    )
+
+
+def _cold(query, reg, strategy="lazy"):
+    tables = {t: reg[t].copy() for t in query.tables}
+    eng = ImputationService(tables, default=MeanImputer)
+    return execute_quip(query, tables, eng, strategy=strategy).answer_tuples()
+
+
+def test_service_patches_aggregates_and_tuples():
+    # duplicates in the projection answer exercise true multiset weights
+    reg = TableRegistry({"R": _mk("R", 8, [5, 5, 7, 9, 5, 7, 2, 4])})
+    svc = QuipService(reg, MeanImputer, ivm=True, strategy="lazy")
+    q_cnt = Query(("R",), (SelectionPredicate("R.v", ">", 4),), (), (),
+                  Aggregate("count", None))
+    q_avg = Query(("R",), (), (), (), Aggregate("avg", "R.v", group_by="R.k"))
+    q_prj = Query(("R",), (SelectionPredicate("R.v", "<=", 7),), (), ("R.v",))
+    tickets = [svc.submit(q) for q in (q_cnt, q_avg, q_prj)]
+    svc.run_until_idle()
+    for t in tickets:
+        svc.answers(t)
+
+    reg.update_rows("R", np.array([0, 6]), {"R.v": np.array([100, 5])})
+    reg.delete_rows("R", np.array([3]))
+    reg.insert_rows("R", {"R.k": np.array([1, 2]),
+                          "R.v": np.array([7, 7])})
+
+    s = svc.summary()
+    assert s["results_patched"] == 9  # 3 entries × 3 mutations, all patched
+    assert s["ivm_fallbacks"] == 0
+    assert dict(svc._ivm.fallback_reasons) == {}
+    for q in (q_cnt, q_avg, q_prj):
+        t = svc.submit(q)
+        svc.run_until_idle()
+        assert svc.summary()["queries_result_cache_hit"] > 0
+        assert svc.answers(t) == _cold(q, reg), q
+    # the patched hits really were served from cache (no re-execution)
+    assert svc.summary()["queries_result_cache_hit"] == 3
+
+
+def test_service_minmax_falls_back():
+    reg = TableRegistry({"R": _mk("R", 6, [1, 2, 3, 4, 5, 6])})
+    svc = QuipService(reg, MeanImputer, ivm=True, strategy="lazy")
+    q = Query(("R",), (), (), (), Aggregate("max", "R.v"))
+    t = svc.submit(q)
+    svc.run_until_idle()
+    svc.answers(t)
+    reg.update_rows("R", np.array([5]), {"R.v": np.array([0])})
+    s = svc.summary()
+    assert s["results_patched"] == 0 and s["ivm_fallbacks"] == 1
+    assert svc._ivm.fallback_reasons["minmax"] == 1
+    t2 = svc.submit(q)
+    svc.run_until_idle()
+    assert svc.answers(t2) == [(5,)]  # recomputed, not stale
+
+
+def test_service_imputed_overlap_falls_back():
+    # the query's answer depended on imputations over R: refitting on the
+    # mutated R could change them, so the entry must not be patched
+    reg = TableRegistry({"R": _mk("R", 6, [1, 2, 3, 4, 5, 6],
+                                  missing=[0, 1, 0, 1, 0, 0])})
+    svc = QuipService(reg, MeanImputer, ivm=True, strategy="lazy")
+    q = Query(("R",), (SelectionPredicate("R.v", ">", 2),), (), (),
+              Aggregate("count", None))
+    t = svc.submit(q)
+    svc.run_until_idle()
+    svc.answers(t)
+    reg.update_rows("R", np.array([0]), {"R.v": np.array([50])})
+    assert svc._ivm.fallback_reasons["imputed_overlap"] == 1
+    assert svc.summary()["ivm_fallbacks"] == 1
+    t2 = svc.submit(q)
+    svc.run_until_idle()
+    assert svc.answers(t2) == _cold(q, reg)
+
+
+def test_service_delta_with_missing_referenced_cells_falls_back():
+    reg = TableRegistry({"R": _mk("R", 6, [1, 2, 3, 4, 5, 6])})
+    svc = QuipService(reg, MeanImputer, ivm=True, strategy="lazy")
+    q = Query(("R",), (SelectionPredicate("R.v", ">", 2),), (), (),
+              Aggregate("count", None))
+    t = svc.submit(q)
+    svc.run_until_idle()
+    svc.answers(t)
+    # insert a row whose referenced attr is missing: imputing it against a
+    # mini delta table would use the wrong fit — must evict instead
+    reg.insert_rows("R", {"R.k": np.array([0]), "R.v": np.array([0])},
+                    missing={"R.v": np.array([True])})
+    assert svc._ivm.fallback_reasons["delta_missing"] == 1
+    t2 = svc.submit(q)
+    svc.run_until_idle()
+    assert svc.answers(t2) == _cold(q, reg)
+
+
+def test_service_replace_table_falls_back():
+    reg = TableRegistry({"R": _mk("R", 6, [1, 2, 3, 4, 5, 6])})
+    svc = QuipService(reg, MeanImputer, ivm=True, strategy="lazy")
+    q = Query(("R",), (), (), (), Aggregate("count", None))
+    t = svc.submit(q)
+    svc.run_until_idle()
+    svc.answers(t)
+    reg.replace_table("R", _mk("R", 2, [9, 9]))
+    assert svc._ivm.fallback_reasons["no_delta"] == 1
+    t2 = svc.submit(q)
+    svc.run_until_idle()
+    assert svc.answers(t2) == [(2,)]
+
+
+def test_ivm_off_keeps_plain_invalidation_accounting():
+    reg = TableRegistry({"R": _mk("R", 6, [1, 2, 3, 4, 5, 6])})
+    svc = QuipService(reg, MeanImputer, ivm=False, strategy="lazy")
+    q = Query(("R",), (), (), (), Aggregate("count", None))
+    t = svc.submit(q)
+    svc.run_until_idle()
+    svc.answers(t)
+    reg.update_rows("R", np.array([0]), {"R.v": np.array([9])})
+    s = svc.summary()
+    assert s["results_invalidated"] == 1
+    assert s["results_patched"] == 0 and s["ivm_fallbacks"] == 0
+
+
+# --------------------------------------------------------------------------- #
+# the compound-dependency leak (fixed for IVM on AND off)
+# --------------------------------------------------------------------------- #
+def _nested_setup(ivm):
+    reg = TableRegistry({
+        "R": _mk("R", 6, [1, 2, 3, 4, 5, 6]),
+        "S": _mk("S", 6, [2, 3, 2, 3, 2, 3]),
+    })
+    svc = QuipService(reg, MeanImputer, ivm=ivm, strategy="lazy")
+    outer = Query(("R",), (), (), ("R.v",))
+    sub = Query(("S",), (SelectionPredicate("S.v", ">", 2),), (), ("S.v",))
+    t = svc.submit_nested(outer, "R.v", sub)
+    svc.run_until_idle()
+    answers = svc.answers(t)
+    return reg, svc, outer, sub, answers
+
+
+@pytest.mark.parametrize("ivm", [False, True])
+def test_compound_entries_die_with_subquery_tables(ivm):
+    reg, svc, outer, sub, before = _nested_setup(ivm)
+    assert before == [(3,)]  # R.v IN {S.v > 2} = {3}
+    # the rewritten outer entry's signature names only R, but it depends on
+    # S through the baked-in IN-set: the reverse index must know
+    leaked = [k for k in svc.result_cache.keys_for_table("S")
+              if "S" not in k[0][1]]
+    assert leaked, "outer2 entry not registered under S"
+    reg.update_rows("S", np.arange(6), {"S.v": np.full(6, 9)})
+    # the outer2 entry the key-derived scan used to leak is gone: IVM may
+    # keep *patching* entries that name S in their signature (the plain
+    # sub-query answer), but never one depending on S only via the IN-set
+    assert all("S" in k[0][1] for k in svc.result_cache.keys_for_table("S"))
+    if ivm:
+        assert svc._ivm.fallback_reasons["compound_dep"] >= 1
+    else:
+        assert svc.result_cache.keys_for_table("S") == ()
+    # plan-cache entries widen the same way (plans always evict)
+    assert svc.plan_cache.keys_for_table("S") == ()
+    t2 = svc.submit_nested(outer, "R.v", sub)
+    svc.run_until_idle()
+    assert svc.answers(t2) == []  # IN-set is now {9}; no R.v matches

@@ -182,6 +182,133 @@ def _fuzz_case(seed: int, policy: str, shared: bool, n_ops: int,
 
 
 # --------------------------------------------------------------------------- #
+# delta-mode profile (QUIP_IVM): patched answers == evicted-world answers
+# --------------------------------------------------------------------------- #
+def _gen_mutation(rng: np.random.Generator, reg: TableRegistry,
+                  max_rows: int):
+    """Draw mutation parameters *without* applying them, so the identical
+    mutation can hit several registries (the IVM-on / IVM-off pair)."""
+    table = f"R{int(rng.integers(0, 2))}"
+    n = reg[table].num_rows
+    if n <= 8:
+        return None
+    r = rng.random()
+    if r < 0.5:
+        k = int(rng.integers(1, 4))
+        rows = rng.choice(n, size=k, replace=False).astype(np.int64)
+        vals = rng.integers(0, 6, size=k).astype(np.int64)
+        return ("update", table, rows, {f"{table}.v": vals})
+    if r < 0.8 or n >= max_rows:
+        k = int(rng.integers(1, 3))
+        rows = rng.choice(n, size=k, replace=False).astype(np.int64)
+        return ("delete", table, rows, None)
+    # insert fully-present rows, never growing past the original row count:
+    # the ground-truth oracle's arrays are indexed by tid
+    k = int(rng.integers(1, min(3, max_rows - n + 1)))
+    values = {a: rng.integers(0, 6, size=k).astype(np.int64)
+              for a in reg[table].column_names()}
+    return ("insert", table, None, values)
+
+
+def _apply_mutation(reg: TableRegistry, mut) -> None:
+    kind, table, rows, payload = mut
+    if kind == "update":
+        reg.update_rows(table, rows, payload)
+    elif kind == "delete":
+        reg.delete_rows(table, rows)
+    else:
+        reg.insert_rows(table, payload)
+
+
+def _ivm_fuzz_case(seed: int, n_ops: int, rows: int = 40,
+                   missing_rate: float = 0.0) -> None:
+    """Twin services over identical data and mutation streams — IVM on vs
+    off — plus the cold-replay oracle.  Asserts three-way bit-identical
+    answers after every query and the maintenance accounting invariant:
+    every cached answer that depended on a mutated table was either
+    patched or evicted (``results_patched + ivm_fallbacks`` equals the
+    dependent-entry count summed at mutation time)."""
+    ctx = f"[ivm-fuzz] seed={seed} n_ops={n_ops} missing={missing_rate}"
+    print(ctx)
+    rng = np.random.default_rng(seed)
+    tables, _clean, truth = _build_instance(
+        np.random.default_rng(seed + 2000), 2, rows, missing_rate, 6
+    )
+    factory = lambda: GroundTruthImputer(truth)  # noqa: E731
+    svcs, regs = {}, {}
+    for mode, flag in (("on", True), ("off", False)):
+        regs[mode] = TableRegistry({t: r.copy() for t, r in tables.items()})
+        svcs[mode] = QuipService(
+            regs[mode], factory, strategy="lazy", max_inflight=3,
+            morsel_rows=MORSEL_ROWS, cost_model="unit",
+            result_cache_size=32, ivm=flag,
+        )
+    dependents = 0  # cached entries depending on a mutated table, at commit
+    for _ in range(n_ops):
+        if rng.random() < 0.6:
+            query = _rand_query(rng)
+            strategy = STRATEGIES[int(rng.integers(0, len(STRATEGIES)))]
+            answers = {}
+            for mode, svc in svcs.items():
+                ticket = svc.submit(query, strategy=strategy)
+                svc.run_until_idle()
+                answers[mode] = Counter(svc.answers(ticket))
+            snapshot = {t: regs["on"][t].copy() for t in query.tables}
+            cold = Counter(
+                _replay(query, strategy, snapshot, factory).answer_tuples()
+            )
+            assert answers["on"] == cold, (
+                f"{ctx} IVM-on diverged from cold replay for {query}"
+            )
+            assert answers["off"] == cold, (
+                f"{ctx} IVM-off diverged from cold replay for {query}"
+            )
+        else:
+            # services are drained after every submit, so mutations always
+            # land on an idle pair and both registries stay in lockstep
+            mut = _gen_mutation(rng, regs["on"], rows)
+            if mut is None:
+                continue
+            dependents += len(
+                svcs["on"].result_cache.keys_for_table(mut[1])
+            )
+            for mode in ("on", "off"):
+                _apply_mutation(regs[mode], mut)
+    s_on, s_off = svcs["on"].summary(), svcs["off"].summary()
+    assert s_on["results_patched"] + s_on["ivm_fallbacks"] == dependents, (
+        f"{ctx} accounting broke: patched={s_on['results_patched']} "
+        f"fallbacks={s_on['ivm_fallbacks']} dependents={dependents} "
+        f"reasons={dict(svcs['on']._ivm.fallback_reasons)}"
+    )
+    assert s_off["results_patched"] == 0 and s_off["ivm_fallbacks"] == 0, ctx
+    assert s_on["queries"] == s_off["queries"], ctx
+    if missing_rate == 0.0:
+        # clean data: nothing imputed, so count/sum/select entries must
+        # actually be *patched* (imputed_overlap cannot fire)
+        assert s_on["results_patched"] > 0, (
+            f"{ctx} no patches — reasons="
+            f"{dict(svcs['on']._ivm.fallback_reasons)}"
+        )
+        assert "imputed_overlap" not in svcs["on"]._ivm.fallback_reasons, ctx
+
+
+@pytest.mark.parametrize("seed,missing_rate", [
+    (0, 0.0),
+    (1, 0.0),
+    (2, 0.3),
+])
+def test_serving_fuzz_ivm(seed, missing_rate):
+    _ivm_fuzz_case(seed, n_ops=32, missing_rate=missing_rate)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", list(range(3, 9)))
+@pytest.mark.parametrize("missing_rate", [0.0, 0.3])
+def test_serving_fuzz_ivm_deep(seed, missing_rate):
+    _ivm_fuzz_case(seed, n_ops=90, rows=56, missing_rate=missing_rate)
+
+
+# --------------------------------------------------------------------------- #
 # fast profile: default suite
 # --------------------------------------------------------------------------- #
 @pytest.mark.parametrize("seed,policy,shared", [
